@@ -1,0 +1,36 @@
+"""Shared benchmark plumbing: CSV emission + cached reproduction results."""
+from __future__ import annotations
+
+import os
+import sys
+import time
+from typing import Callable, Iterable, List, Tuple
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.3f},{derived}", flush=True)
+
+
+def reproduction(network: str, fast: bool = False) -> dict:
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    from repro.core.reproduction import run_reproduction
+
+    samples = {"gnmt": 640, "ds2": 320} if fast else None
+    return run_reproduction(
+        network, samples=samples[network] if samples else None,
+        tag="_fast" if fast else "")
+
+
+def timeit(fn: Callable, *args, repeats: int = 3) -> float:
+    """Median wall microseconds per call (after a warmup call)."""
+    import jax
+    jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6

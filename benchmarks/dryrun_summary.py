@@ -1,0 +1,64 @@
+"""Dry-run / roofline tables as benchmark rows (reads results/*.jsonl)."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import RESULTS_DIR, emit
+
+
+def _read(name):
+    path = os.path.join(RESULTS_DIR, name)
+    if not os.path.exists(path):
+        return []
+    return [json.loads(l) for l in open(path)]
+
+
+def compile_summary(fast: bool) -> None:
+    for mesh, fname in (("16x16", "dryrun_compile_single.jsonl"),
+                        ("2x16x16", "dryrun_compile_multi.jsonl")):
+        recs = _read(fname)
+        ok = sum(1 for r in recs if r["status"] == "ok")
+        fits = sum(1 for r in recs if r["status"] == "ok"
+                   and r.get("memory", {}).get("fits_v5e_16g_structural"))
+        emit(f"dryrun_compile_{mesh}", 0.0,
+             f"cells_ok={ok}/{len(recs)} fits_structural={fits}")
+        for r in recs:
+            if r["status"] != "ok":
+                emit(f"dryrun_FAIL_{mesh}_{r['arch']}_{r['shape']}", 0.0,
+                     r["error"][:120])
+
+
+def roofline_summary(fast: bool) -> None:
+    recs = _read("dryrun_roofline.jsonl")
+    for r in recs:
+        if r["status"] != "ok":
+            emit(f"roofline_FAIL_{r['arch']}_{r['shape']}", 0.0,
+                 r["error"][:120])
+            continue
+        t = r["terms"]
+        step_s = max(t.values())
+        emit(f"roofline_{r['arch']}_{r['shape']}", step_s * 1e6,
+             f"dominant={r['dominant']} compute_s={t['compute_s']:.4f} "
+             f"memory_s={t['memory_s']:.4f} "
+             f"collective_s={t['collective_s']:.4f} "
+             f"useful_flops_ratio={r['useful_flops_ratio']:.3f} "
+             f"roofline_fraction={r['roofline_fraction']:.4f}")
+
+
+def perf_summary(fast: bool) -> None:
+    """Hillclimbed cells: baseline vs optimized (results/perf_*.json)."""
+    for name in sorted(os.listdir(RESULTS_DIR)):
+        if not name.startswith("perf_") or not name.endswith(".json"):
+            continue
+        with open(os.path.join(RESULTS_DIR, name)) as f:
+            p = json.load(f)
+        emit(f"perf_{p['cell']}", 0.0,
+             f"baseline_bound_s={p['baseline']['bound_s']:.4f} "
+             f"optimized_bound_s={p['optimized']['bound_s']:.4f} "
+             f"speedup={p['speedup']:.2f}x "
+             f"roofline_frac {p['baseline']['fraction']:.3f}"
+             f"->{p['optimized']['fraction']:.3f}")
+
+
+ALL = [compile_summary, roofline_summary, perf_summary]

@@ -1,0 +1,151 @@
+"""Benchmarks mirroring each paper table/figure (DESIGN.md §9).
+
+Each function emits ``name,us_per_call,derived`` rows; `us_per_call` is the
+relevant per-iteration time where meaningful (else 0), `derived` carries the
+figure's headline quantity.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, reproduction
+
+
+def sl_histogram(fast: bool) -> None:
+    """Fig. 7: unique-SL histograms of the training sets."""
+    for net in ("gnmt", "ds2"):
+        r = reproduction(net, fast)
+        hist = r["sl_histogram"]
+        n_uniq = r["num_unique_sls"]
+        frac = n_uniq / r["num_iterations"]
+        emit(f"fig7_sl_histogram_{net}", 0.0,
+             f"unique_sls={n_uniq} iterations={r['num_iterations']} "
+             f"unique_frac={frac:.2f} "
+             f"min={min(map(int, hist))} max={max(map(int, hist))}")
+
+
+def runtime_vs_sl(fast: bool) -> None:
+    """Fig. 9: per-iteration runtime vs SL (near-linear for RNNs)."""
+    for net in ("gnmt", "ds2"):
+        r = reproduction(net, fast)
+        by_sl = {int(k): v for k, v in r["wallclock"]["runtime_by_sl"].items()}
+        sls = np.array(sorted(by_sl))
+        ts = np.array([by_sl[s] for s in sls])
+        corr = float(np.corrcoef(sls, ts)[0, 1])
+        slope = float(np.polyfit(sls, ts, 1)[0])
+        emit(f"fig9_runtime_vs_sl_{net}", float(ts.mean() * 1e6),
+             f"pearson_r={corr:.4f} us_per_sl={slope*1e6:.2f} "
+             f"range=[{ts.min()*1e3:.1f},{ts.max()*1e3:.1f}]ms")
+
+
+def profile_similarity(fast: bool) -> None:
+    """Fig. 8: nearby SLs have similar kernel (HLO-op) distributions."""
+    for net in ("gnmt", "ds2"):
+        r = reproduction(net, fast)
+        hists = r.get("op_histograms")
+        if not hists:
+            continue
+        sls = sorted(int(k) for k in hists)
+        keys = sorted({k for h in hists.values() for k in h})
+
+        def vec(sl):
+            h = hists[str(sl)] if str(sl) in hists else hists[sl]
+            v = np.array([h.get(k, 0) for k in keys], float)
+            return v / max(np.linalg.norm(v), 1e-12)
+
+        near = float(vec(sls[0]) @ vec(sls[1]))
+        far = float(vec(sls[0]) @ vec(sls[-1]))
+        emit(f"fig8_profile_similarity_{net}", 0.0,
+             f"cosine_near={near:.4f} cosine_far={far:.4f} "
+             f"sls={sls[0]}/{sls[1]}/{sls[-1]}")
+
+
+def projection_error(fast: bool) -> None:
+    """Figs. 11/12: error projecting total training time (wallclock track
+    = config#1 measured on this host; analytic track = configs #1-#5)."""
+    for net in ("gnmt", "ds2"):
+        r = reproduction(net, fast)
+        for method, v in r["wallclock"]["methods"].items():
+            emit(f"fig11_12_time_error_wallclock_{net}_{method}", 0.0,
+                 f"error_pct={v['error_pct']:.3f} points={v['num_points']}")
+        for method, v in r["analytic"]["methods"].items():
+            emit(f"fig11_12_time_error_analytic_{net}_{method}", 0.0,
+                 f"geomean_error_pct={v['geomean_time_error_pct']:.3f} "
+                 f"points={v['num_points']}")
+
+
+def sensitivity(fast: bool) -> None:
+    """Figs. 13/14: per-SL speedup spread across hardware configs."""
+    for net in ("gnmt", "ds2"):
+        r = reproduction(net, fast)
+        for cfgname, d in r["analytic"]["per_sl_speedup"].items():
+            sp = np.array(list(d.values()))
+            emit(f"fig13_14_sensitivity_{net}_{cfgname}", 0.0,
+                 f"speedup_min={sp.min():.3f} max={sp.max():.3f} "
+                 f"spread_pct={100*(sp.max()-sp.min())/sp.min():.1f}")
+
+
+def speedup_projection(fast: bool) -> None:
+    """Figs. 15/16: error projecting config#1 -> #c speedups."""
+    for net in ("gnmt", "ds2"):
+        r = reproduction(net, fast)
+        for method, v in r["analytic"]["methods"].items():
+            worst_pp = max(c["speedup_error_pp"]
+                           for c in v["per_config"].values())
+            geo = float(np.exp(np.mean(
+                [np.log(max(c["speedup_error_pp"], 1e-3))
+                 for k, c in v["per_config"].items() if k != "config1"])))
+            emit(f"fig15_16_speedup_error_{net}_{method}", 0.0,
+                 f"geomean_error_pp={geo:.3f} worst_pp={worst_pp:.3f}")
+
+
+def profiling_speedup(fast: bool) -> None:
+    """§VI-F: profiling-cost reduction (iterations + measured seconds)."""
+    for net in ("gnmt", "ds2"):
+        r = reproduction(net, fast)
+        p = r["wallclock"]["profiling"]
+        serial = p["full_seconds"] / max(p["seqpoint_seconds"], 1e-9)
+        emit(f"sec6f_profiling_speedup_{net}", 0.0,
+             f"iter_reduction={p['iter_reduction']:.1f}x "
+             f"measured_seconds_reduction={serial:.1f}x "
+             f"(full={p['full_seconds']:.1f}s "
+             f"seqpoints={p['seqpoint_seconds']:.1f}s)")
+
+
+def iteration_heterogeneity(fast: bool) -> None:
+    """Fig. 4: per-iteration arch counters vary across iterations."""
+    for net in ("gnmt", "ds2"):
+        r = reproduction(net, fast)
+        stats = r["analytic"]["per_sl_stats"]
+        fl = np.array([v["flops"] for v in stats.values()])
+        by = np.array([v["bytes"] for v in stats.values()])
+        emit(f"fig4_heterogeneity_{net}", 0.0,
+             f"flops_spread_pct={100*(fl.max()-fl.min())/fl.min():.0f} "
+             f"bytes_spread_pct={100*(by.max()-by.min())/by.min():.0f}")
+
+
+def gemm_dims(fast: bool) -> None:
+    """Table I: the same GEMM's dims differ across SLs."""
+    import re
+
+    import jax
+
+    from repro.core.reproduction import SETUPS
+    setup = SETUPS["gnmt"]()
+    dims = {}
+    for sl in (16, 96):
+        fn, args = setup["step_builder"](sl)
+        txt = jax.jit(fn).lower(*args).compile().as_text()
+        dots = re.findall(r"= f32\[([0-9,]+)\][^ ]* dot\(", txt)
+        # largest three GEMM outputs — attention scores/context grow with SL
+        dots = sorted(set(dots),
+                      key=lambda d: -int(d.split(",")[0]) * int(
+                          d.split(",")[-1]))[:3]
+        dims[sl] = dots
+    emit("table1_gemm_dims_gnmt", 0.0,
+         f"sl16={dims[16]} sl96={dims[96]}")
+
+
+ALL = [sl_histogram, runtime_vs_sl, profile_similarity, projection_error,
+       sensitivity, speedup_projection, profiling_speedup,
+       iteration_heterogeneity, gemm_dims]

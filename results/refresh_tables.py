@@ -1,0 +1,52 @@
+"""Regenerate results/*.md tables from the jsonl records."""
+import json
+import os
+
+HERE = os.path.dirname(__file__)
+
+
+def roofline_table():
+    out = ["| arch | shape | compute s | memory s | collective s | dominant"
+           " | useful FLOPs ratio | roofline frac |",
+           "|---|---|---|---|---|---|---|---|"]
+    for line in open(os.path.join(HERE, "dryrun_roofline.jsonl")):
+        r = json.loads(line)
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | FAIL:"
+                       f" {r['error'][:60]} | | | | | |")
+            continue
+        t = r["terms"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.4f} | "
+            f"{t['memory_s']:.4f} | {t['collective_s']:.4f} | "
+            f"{r['dominant'].replace('_s','')} | "
+            f"{r['useful_flops_ratio']:.3f} | "
+            f"{100*r['roofline_fraction']:.1f}% |")
+    with open(os.path.join(HERE, "roofline_table.md"), "w") as f:
+        f.write("\n".join(out) + "\n")
+
+
+def perf_table():
+    rows = []
+    for name in sorted(os.listdir(HERE)):
+        if not (name.startswith("perf_") and name.endswith(".json")):
+            continue
+        p = json.load(open(os.path.join(HERE, name)))
+        b, o = p["baseline"], p["optimized"]
+        rows.append(
+            f"| {p['arch']}/{p['shape']} | {p['opt']} | "
+            f"{b['bound_s']:.3f} ({b['dominant'].replace('_s','')}) | "
+            f"{o['bound_s']:.3f} ({o['dominant'].replace('_s','')}) | "
+            f"{p['speedup']:.2f}x | {100*b['fraction']:.1f}% -> "
+            f"{100*o['fraction']:.1f}% | {p['confirmed']} |")
+    out = ["| cell | opt | baseline bound | optimized bound | speedup |"
+           " roofline frac | confirmed |",
+           "|---|---|---|---|---|---|---|"] + rows
+    with open(os.path.join(HERE, "perf_table.md"), "w") as f:
+        f.write("\n".join(out) + "\n")
+
+
+if __name__ == "__main__":
+    roofline_table()
+    perf_table()
+    print(open(os.path.join(HERE, "perf_table.md")).read())

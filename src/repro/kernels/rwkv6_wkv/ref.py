@@ -1,0 +1,26 @@
+"""Sequential oracle for the WKV6 kernel (same recurrence as
+repro.models.rwkv.wkv6_sequential, flattened-head layout)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, lw, u):
+    """r/k/v/lw: (BH, S, dh); u: (BH, dh). y_t = r_t.(S_{t-1} + u k_t v_t^T);
+    S_t = diag(exp(lw_t)) S_{t-1} + k_t v_t^T."""
+    bh, s, dh = r.shape
+    w = jnp.exp(lw.astype(jnp.float32))
+
+    def step(st, xs):
+        rt, kt, vt, wt = xs
+        y = jnp.einsum("bk,bkv->bv", rt, st) + \
+            jnp.einsum("bk,bk,bv->bv", rt, u * kt, vt)
+        st = wt[..., None] * st + kt[..., None] * vt[..., None, :]
+        return st, y
+
+    xs = tuple(jnp.moveaxis(t.astype(jnp.float32), 1, 0)
+               for t in (r, k, v, w))
+    st0 = jnp.zeros((bh, dh, dh), jnp.float32)
+    _, ys = jax.lax.scan(step, st0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(r.dtype)

@@ -1,0 +1,28 @@
+"""Production meshes. Functions only — importing this module never touches
+jax device state (DESIGN.md §6)."""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+
+from repro.configs.base import MULTI_POD, SINGLE_POD, MeshConfig
+
+
+def make_mesh(cfg: MeshConfig, devices: Optional[Sequence] = None) -> jax.sharding.Mesh:
+    devices = list(devices if devices is not None else jax.devices())
+    need = cfg.num_devices
+    if len(devices) < need:
+        raise ValueError(
+            f"mesh {cfg.shape} needs {need} devices, have {len(devices)} "
+            "(the dry-run launcher sets XLA_FLAGS="
+            "--xla_force_host_platform_device_count=512 before importing jax)")
+    return jax.make_mesh(
+        cfg.shape, cfg.axes, devices=devices[:need],
+        axis_types=(jax.sharding.AxisType.Auto,) * len(cfg.axes))
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """(16, 16) = (data, model) single pod; (2, 16, 16) = (pod, data, model)
+    across two pods. 256 chips/pod (TPU v5e-256 topology)."""
+    return make_mesh(MULTI_POD if multi_pod else SINGLE_POD)

@@ -1,0 +1,6 @@
+from repro.models.model_zoo import Model, build_from_run, build_model
+from repro.models.transformer import Runtime, TransformerLM
+from repro.models.encdec import EncDecLM
+
+__all__ = ["Model", "Runtime", "TransformerLM", "EncDecLM", "build_model",
+           "build_from_run"]

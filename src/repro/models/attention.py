@@ -1,0 +1,299 @@
+"""Attention: GQA/MHA with memory-sane chunked softmax, MLA, decode paths.
+
+The chunked path is the pure-XLA analogue of the Pallas flash kernel
+(``repro.kernels.flash_attention``): online softmax over KV chunks inside a
+``lax.scan`` so S^2 score matrices are never materialized in HBM. The scan can
+be unrolled for dry-run cost analysis (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_rope, dense_init, rms_norm
+
+Params = Dict[str, Any]
+
+NEG_INF = -1e30
+
+
+def _repeat_kv(k: jax.Array, num_q_heads: int) -> jax.Array:
+    """(B, S, Hkv, dh) -> (B, S, Hq, dh) by repeating each group."""
+    b, s, hkv, dh = k.shape
+    if hkv == num_q_heads:
+        return k
+    reps = num_q_heads // hkv
+    return jnp.repeat(k, reps, axis=2)
+
+
+def full_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                   causal: bool, q_offset: int | jax.Array = 0,
+                   kv_valid_len: Optional[jax.Array] = None) -> jax.Array:
+    """Reference O(S^2)-memory attention. q:(B,Sq,H,dh) k/v:(B,Skv,H,dh)."""
+    b, sq, h, dh = q.shape
+    skv = k.shape[1]
+    scale = 1.0 / math.sqrt(dh)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    kpos = jnp.arange(skv)
+    mask = None
+    if causal:
+        qpos = q_offset + jnp.arange(sq)
+        mask = kpos[None, :] <= qpos[:, None]            # (Sq, Skv)
+    if kv_valid_len is not None:
+        vmask = kpos[None, :] < kv_valid_len[:, None]     # (B, Skv)
+        vmask = vmask[:, None, None, :]
+        scores = jnp.where(vmask, scores, NEG_INF)
+    if mask is not None:
+        scores = jnp.where(mask[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool, chunk: int, unroll: int = 1) -> jax.Array:
+    """Online-softmax attention scanning over KV chunks (flash-style)."""
+    b, sq, h, dh = q.shape
+    skv = k.shape[1]
+    assert skv % chunk == 0, (skv, chunk)
+    n = skv // chunk
+    scale = 1.0 / math.sqrt(dh)
+    kc = k.reshape(b, n, chunk, h, dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n, chunk, h, dh).transpose(1, 0, 2, 3, 4)
+    qpos = jnp.arange(sq)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        j, kj, vj = xs
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kj,
+                       preferred_element_type=jnp.float32) * scale
+        if causal:
+            kpos = j * chunk + jnp.arange(chunk)
+            mask = kpos[None, :] <= qpos[:, None]
+            s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhqk,bkhd->bhqd", p.astype(vj.dtype), vj)
+        acc_new = acc * corr[..., None].astype(acc.dtype) + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    a0 = jnp.zeros((b, h, sq, dh), v.dtype)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (jnp.arange(n), kc, vc), unroll=max(unroll, 1))
+    out = acc / jnp.maximum(l, 1e-30)[..., None].astype(acc.dtype)
+    return out.transpose(0, 2, 1, 3)                      # (B, Sq, H, dh)
+
+
+def gqa_decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                         kv_valid_len: jax.Array) -> jax.Array:
+    """Single-step decode without expanding KV to query heads: the grouped
+    einsum contracts the (possibly sequence-sharded) cache directly; under
+    SPMD the softmax reductions become the flash-decode partial-max/sum
+    combine. q: (B, 1, Hq, dh); k/v: (B, S, Hkv, dh)."""
+    b, sq, hq, dh = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    q5 = q.reshape(b, sq, hkv, g, dh)
+    scale = 1.0 / math.sqrt(dh)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", q5, k,
+                        preferred_element_type=jnp.float32) * scale
+    kpos = jnp.arange(k.shape[1])
+    vmask = (kpos[None, :] < kv_valid_len[:, None])[:, None, None, None, :]
+    scores = jnp.where(vmask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return out.reshape(b, sq, hq, dh)
+
+
+def attention_core(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool,
+                   chunk: int = 0, unroll: int = 1,
+                   kv_valid_len: Optional[jax.Array] = None) -> jax.Array:
+    """Dispatch between full and chunked paths. GQA repeat happens here."""
+    if kv_valid_len is not None and q.shape[1] == 1 and not causal \
+            and q.shape[2] % k.shape[2] == 0:
+        return gqa_decode_attention(q, k, v, kv_valid_len)
+    k = _repeat_kv(k, q.shape[2])
+    v = _repeat_kv(v, q.shape[2])
+    skv = k.shape[1]
+    if chunk and skv % chunk == 0 and skv > chunk and kv_valid_len is None:
+        return chunked_attention(q, k, v, causal=causal, chunk=chunk,
+                                 unroll=unroll)
+    return full_attention(q, k, v, causal=causal, kv_valid_len=kv_valid_len)
+
+
+# ---------------------------------------------------------------------------
+# GQA block
+
+
+def init_gqa(rng: jax.Array, cfg: ModelConfig, dtype,
+             num_q_heads: int) -> Params:
+    d, dh = cfg.d_model, cfg.resolved_head_dim
+    hq, hkv = num_q_heads, cfg.num_kv_heads
+    ks = jax.random.split(rng, 4)
+    p: Params = {
+        "wq": dense_init(ks[0], (d, hq * dh), dtype),
+        "wk": dense_init(ks[1], (d, hkv * dh), dtype),
+        "wv": dense_init(ks[2], (d, hkv * dh), dtype),
+        "wo": dense_init(ks[3], (hq * dh, d), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * dh,), dtype)
+        p["bk"] = jnp.zeros((hkv * dh,), dtype)
+        p["bv"] = jnp.zeros((hkv * dh,), dtype)
+    return p
+
+
+def gqa_forward(p: Params, x: jax.Array, cfg: ModelConfig, *,
+                positions: jax.Array, causal: bool = True, chunk: int = 0,
+                unroll: int = 1,
+                cache: Optional[Tuple[jax.Array, jax.Array]] = None,
+                cache_index: Optional[jax.Array] = None,
+                return_kv: bool = False):
+    """Self-attention. With ``cache=(K, V)`` and ``cache_index``, runs one
+    decode step updating the cache in place (functionally)."""
+    b, s, d = x.shape
+    dh = cfg.resolved_head_dim
+    hq = p["wq"].shape[1] // dh
+    hkv = p["wk"].shape[1] // dh
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"])
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, hq, dh)
+    k = k.reshape(b, s, hkv, dh)
+    v = v.reshape(b, s, hkv, dh)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        ck, cv = cache
+        assert s == 1, "cache path is a single decode step"
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype),
+                                                 cache_index, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype),
+                                                 cache_index, axis=1)
+        new_cache = (ck, cv)
+        valid = jnp.full((b,), cache_index + 1, jnp.int32)
+        out = attention_core(q, ck, cv, causal=False, kv_valid_len=valid)
+    else:
+        out = attention_core(q, k, v, causal=causal, chunk=chunk,
+                             unroll=unroll)
+        if return_kv:
+            new_cache = (k, v)
+    y = jnp.einsum("bsh,hd->bsd", out.reshape(b, s, hq * dh), p["wo"])
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V3 multi-head latent attention)
+
+
+def init_mla(rng: jax.Array, cfg: ModelConfig, dtype) -> Params:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    qk = m.qk_nope_head_dim
+    ks = jax.random.split(rng, 8)
+    return {
+        "w_dq": dense_init(ks[0], (d, m.q_lora_rank), dtype),
+        "q_norm": jnp.ones((m.q_lora_rank,), dtype),
+        "w_uq": dense_init(ks[1], (m.q_lora_rank,
+                                   h * (qk + m.qk_rope_head_dim)), dtype),
+        "w_dkv": dense_init(ks[2], (d, m.kv_lora_rank), dtype),
+        "kv_norm": jnp.ones((m.kv_lora_rank,), dtype),
+        "w_kr": dense_init(ks[3], (d, m.qk_rope_head_dim), dtype),
+        "w_uk": dense_init(ks[4], (m.kv_lora_rank, h * qk), dtype),
+        "w_uv": dense_init(ks[5], (m.kv_lora_rank, h * m.v_head_dim), dtype),
+        "wo": dense_init(ks[6], (h * m.v_head_dim, d), dtype),
+    }
+
+
+def _mla_q(p: Params, x: jax.Array, cfg: ModelConfig, positions: jax.Array):
+    m, h = cfg.mla, cfg.num_heads
+    b, s, _ = x.shape
+    cq = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["w_dq"]), p["q_norm"],
+                  cfg.norm_eps)
+    q = jnp.einsum("bsr,rh->bsh", cq, p["w_uq"]).reshape(
+        b, s, h, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope = q[..., :m.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., m.qk_nope_head_dim:], positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_latent(p: Params, x: jax.Array, cfg: ModelConfig,
+                positions: jax.Array):
+    ckv = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["w_dkv"]), p["kv_norm"],
+                   cfg.norm_eps)
+    kr = jnp.einsum("bsd,dr->bsr", x, p["w_kr"])          # shared rope key
+    kr = apply_rope(kr[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return ckv, kr
+
+
+def mla_forward(p: Params, x: jax.Array, cfg: ModelConfig, *,
+                positions: jax.Array, chunk: int = 0, unroll: int = 1,
+                cache: Optional[Tuple[jax.Array, jax.Array]] = None,
+                cache_index: Optional[jax.Array] = None,
+                return_kv: bool = False):
+    """MLA. Cache holds the *compressed* latents (c_kv, k_rope): the serving
+    memory win of MLA. Decode uses the absorbed formulation (q^T W_uk c_kv) so
+    per-step work is O(S * kv_lora_rank) instead of O(S * H * dh)."""
+    m, h = cfg.mla, cfg.num_heads
+    b, s, d = x.shape
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)
+
+    if cache is not None:
+        c_cache, r_cache = cache
+        assert s == 1
+        ckv, kr = _mla_latent(p, x, cfg, positions)
+        c_cache = jax.lax.dynamic_update_slice_in_dim(
+            c_cache, ckv.astype(c_cache.dtype), cache_index, axis=1)
+        r_cache = jax.lax.dynamic_update_slice_in_dim(
+            r_cache, kr.astype(r_cache.dtype), cache_index, axis=1)
+        # absorb W_uk into q: (B,1,H,nope) x (r, H*nope) -> (B,1,H,r)
+        w_uk = p["w_uk"].reshape(m.kv_lora_rank, h, m.qk_nope_head_dim)
+        q_abs = jnp.einsum("bshn,rhn->bshr", q_nope, w_uk)
+        scores = (jnp.einsum("bshr,btr->bhst", q_abs, c_cache,
+                             preferred_element_type=jnp.float32)
+                  + jnp.einsum("bshr,btr->bhst", q_rope, r_cache,
+                               preferred_element_type=jnp.float32))
+        scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+        kpos = jnp.arange(c_cache.shape[1])
+        valid = kpos[None, :] <= cache_index
+        scores = jnp.where(valid[:, None, None, :] if valid.ndim == 2
+                           else valid[None, None, None, :], scores * scale,
+                           NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bhst,btr->bshr", probs.astype(c_cache.dtype),
+                         c_cache)                          # (B,1,H,r)
+        w_uv = p["w_uv"].reshape(m.kv_lora_rank, h, m.v_head_dim)
+        o = jnp.einsum("bshr,rhv->bshv", ctx, w_uv)
+        y = jnp.einsum("bsh,hd->bsd", o.reshape(b, s, h * m.v_head_dim),
+                       p["wo"])
+        return y, (c_cache, r_cache)
+
+    # train / prefill: expanded form
+    ckv, kr = _mla_latent(p, x, cfg, positions)
+    k_nope = jnp.einsum("bsr,rh->bsh", ckv, p["w_uk"]).reshape(
+        b, s, h, m.qk_nope_head_dim)
+    v = jnp.einsum("bsr,rh->bsh", ckv, p["w_uv"]).reshape(
+        b, s, h, m.v_head_dim)
+    k_rope = jnp.broadcast_to(kr[:, :, None, :], (b, s, h, m.qk_rope_head_dim))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope], axis=-1)
+    # pad v up to qk head dim so the shared attention core applies
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    vpad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, qk_dim - m.v_head_dim)))
+    out = attention_core(q, k, vpad, causal=True, chunk=chunk, unroll=unroll)
+    out = out[..., :m.v_head_dim]
+    y = jnp.einsum("bsh,hd->bsd", out.reshape(b, s, h * m.v_head_dim),
+                   p["wo"])
+    return y, ((ckv, kr) if return_kv else None)

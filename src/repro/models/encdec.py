@@ -1,0 +1,268 @@
+"""Encoder-decoder transformer (whisper-medium backbone).
+
+The conv/mel frontend is a stub per the assignment: ``input_specs`` provides
+precomputed frame embeddings (B, source_len, d_model). Encoder is
+bidirectional; decoder layers are self-attn (causal, cached) + cross-attn
+(keys/values precomputed once at prefill) + FFN. Whisper uses LayerNorm and
+learned positions.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig, StepKind
+from repro.models import attention as attn
+from repro.models.layers import (
+    Params,
+    dense_init,
+    embed_init,
+    layer_norm,
+    pad_heads,
+    padded_vocab,
+    softmax_xent,
+)
+from repro.models.transformer import Runtime, _auto_chunk
+
+
+def _ln_init(d: int, dt) -> Params:
+    return {"w": jnp.ones((d,), dt), "b": jnp.zeros((d,), dt)}
+
+
+def _ffn_init(rng, cfg: ModelConfig, dt) -> Params:
+    k1, k2 = jax.random.split(rng)
+    return {"wi": dense_init(k1, (cfg.d_model, cfg.d_ff), dt),
+            "bi": jnp.zeros((cfg.d_ff,), dt),
+            "wo": dense_init(k2, (cfg.d_ff, cfg.d_model), dt),
+            "bo": jnp.zeros((cfg.d_model,), dt)}
+
+
+def _ffn(p: Params, x: jax.Array) -> jax.Array:
+    h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["wi"]) + p["bi"])
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"]) + p["bo"]
+
+
+def _mha_init(rng, cfg: ModelConfig, dt, tp: int) -> Params:
+    d = cfg.d_model
+    h = pad_heads(cfg.num_heads, tp)
+    dh = cfg.resolved_head_dim
+    ks = jax.random.split(rng, 4)
+    return {"wq": dense_init(ks[0], (d, h * dh), dt),
+            "wk": dense_init(ks[1], (d, h * dh), dt),
+            "wv": dense_init(ks[2], (d, h * dh), dt),
+            "wo": dense_init(ks[3], (h * dh, d), dt)}
+
+
+def _mha(p: Params, xq: jax.Array, xkv: jax.Array, *, causal: bool,
+         chunk: int, unroll: int, dh: int,
+         kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+         cache: Optional[Tuple[jax.Array, jax.Array]] = None,
+         cache_index=None, return_kv: bool = False):
+    b, sq, d = xq.shape
+    hq = p["wq"].shape[1] // dh
+    q = jnp.einsum("bsd,dh->bsh", xq, p["wq"]).reshape(b, sq, hq, dh)
+    new_cache = None
+    if kv is not None:                       # cross-attn with precomputed K/V
+        k, v = kv
+        out = attn.attention_core(q, k, v, causal=False, chunk=chunk,
+                                  unroll=unroll)
+    else:
+        k = jnp.einsum("bsd,dh->bsh", xkv, p["wk"]).reshape(b, -1, hq, dh)
+        v = jnp.einsum("bsd,dh->bsh", xkv, p["wv"]).reshape(b, -1, hq, dh)
+        if cache is not None:
+            ck, cv = cache
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                ck, k.astype(ck.dtype), cache_index, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cv, v.astype(cv.dtype), cache_index, axis=1)
+            new_cache = (ck, cv)
+            valid = jnp.full((b,), cache_index + 1, jnp.int32)
+            out = attn.attention_core(q, ck, cv, causal=False,
+                                      kv_valid_len=valid)
+        else:
+            out = attn.attention_core(q, k, v, causal=causal, chunk=chunk,
+                                      unroll=unroll)
+            if return_kv:
+                new_cache = (k, v)
+    y = jnp.einsum("bsh,hd->bsd", out.reshape(b, sq, hq * dh), p["wo"])
+    return y, new_cache
+
+
+class EncDecLM:
+    """Whisper-style enc-dec; API mirrors TransformerLM."""
+
+    def __init__(self, cfg: ModelConfig, rt: Runtime):
+        self.cfg, self.rt = cfg, rt
+        self.vocab_p = padded_vocab(cfg.vocab_size)
+
+    def init(self, rng: jax.Array) -> Params:
+        cfg, rt = self.cfg, self.rt
+        dt = rt.param_dtype
+        d = cfg.d_model
+        ks = jax.random.split(rng, 8)
+
+        def enc_layer(k):
+            k1, k2 = jax.random.split(k)
+            return {"attn": _mha_init(k1, cfg, dt, rt.tp_degree),
+                    "attn_ln": _ln_init(d, dt),
+                    "ffn": _ffn_init(k2, cfg, dt), "ffn_ln": _ln_init(d, dt)}
+
+        def dec_layer(k):
+            k1, k2, k3 = jax.random.split(k, 3)
+            return {"self": _mha_init(k1, cfg, dt, rt.tp_degree),
+                    "self_ln": _ln_init(d, dt),
+                    "cross": _mha_init(k2, cfg, dt, rt.tp_degree),
+                    "cross_ln": _ln_init(d, dt),
+                    "ffn": _ffn_init(k3, cfg, dt), "ffn_ln": _ln_init(d, dt)}
+
+        enc_keys = jax.random.split(ks[0], cfg.encoder.num_layers)
+        dec_keys = jax.random.split(ks[1], cfg.num_layers)
+        return {
+            "enc_layers": jax.vmap(enc_layer)(enc_keys),
+            "dec_layers": jax.vmap(dec_layer)(dec_keys),
+            "enc_pos": embed_init(ks[2], (cfg.encoder.max_source_len, d), dt),
+            "dec_pos": embed_init(ks[3], (cfg.max_position, d), dt),
+            "embed": embed_init(ks[4], (self.vocab_p, d), dt),
+            "enc_ln": _ln_init(d, dt),
+            "dec_ln": _ln_init(d, dt),
+        }
+
+    # -- encoder ------------------------------------------------------------
+    def encode(self, p: Params, frames: jax.Array) -> jax.Array:
+        cfg, rt = self.cfg, self.rt
+        dh = cfg.resolved_head_dim
+        s = frames.shape[1]
+        x = frames.astype(rt.compute_dtype) + \
+            p["enc_pos"][:s].astype(rt.compute_dtype)
+        chunk = _auto_chunk(rt, s)
+
+        def layer(x, lp):
+            h = layer_norm(x, lp["attn_ln"]["w"], lp["attn_ln"]["b"])
+            y, _ = _mha(lp["attn"], h, h, causal=False, chunk=chunk,
+                        unroll=rt.attn_unroll, dh=dh)
+            x = x + y
+            h = layer_norm(x, lp["ffn_ln"]["w"], lp["ffn_ln"]["b"])
+            return x + _ffn(lp["ffn"], h), None
+
+        if rt.remat == "block":
+            layer = jax.checkpoint(layer)
+        x, _ = jax.lax.scan(layer, x, p["enc_layers"],
+                            unroll=(cfg.encoder.num_layers
+                                    if rt.unroll_layers else 1))
+        return layer_norm(x, p["enc_ln"]["w"], p["enc_ln"]["b"])
+
+    def _cross_kv(self, p: Params, enc_out: jax.Array):
+        cfg = self.cfg
+        dh = cfg.resolved_head_dim
+        b, s, _ = enc_out.shape
+
+        def one(lp):
+            h = lp["cross"]["wk"].shape[1] // dh
+            k = jnp.einsum("bsd,dh->bsh", enc_out,
+                           lp["cross"]["wk"]).reshape(b, s, h, dh)
+            v = jnp.einsum("bsd,dh->bsh", enc_out,
+                           lp["cross"]["wv"]).reshape(b, s, h, dh)
+            return k, v
+
+        return jax.vmap(one)(p["dec_layers"])
+
+    # -- decoder ------------------------------------------------------------
+    def _decoder(self, p: Params, x: jax.Array, cross_kv, *,
+                 caches=None, cache_index=None, return_caches=False):
+        cfg, rt = self.cfg, self.rt
+        dh = cfg.resolved_head_dim
+        chunk = _auto_chunk(rt, x.shape[1])
+
+        def layer(x, lp, ckv, cache):
+            h = layer_norm(x, lp["self_ln"]["w"], lp["self_ln"]["b"])
+            y, nc = _mha(lp["self"], h, h, causal=True, chunk=chunk,
+                         unroll=rt.attn_unroll, dh=dh, cache=cache,
+                         cache_index=cache_index, return_kv=return_caches)
+            x = x + y
+            h = layer_norm(x, lp["cross_ln"]["w"], lp["cross_ln"]["b"])
+            y, _ = _mha(lp["cross"], h, None, causal=False, chunk=chunk,
+                        unroll=rt.attn_unroll, dh=dh, kv=ckv)
+            x = x + y
+            h = layer_norm(x, lp["ffn_ln"]["w"], lp["ffn_ln"]["b"])
+            return x + _ffn(lp["ffn"], h), nc
+
+        if caches is None:
+            def body(c, xs):
+                lp, ckv = xs
+                x, nc = layer(c, lp, ckv, None)
+                return x, nc
+        else:
+            def body(c, xs):
+                lp, ckv, cache = xs
+                x, nc = layer(c, lp, ckv, cache)
+                return x, nc
+
+        if rt.remat == "block":
+            body = jax.checkpoint(body)
+        xs = ((p["dec_layers"], cross_kv) if caches is None
+              else (p["dec_layers"], cross_kv, caches))
+        x, ncs = jax.lax.scan(body, x, xs,
+                              unroll=cfg.num_layers if rt.unroll_layers else 1)
+        return layer_norm(x, p["dec_ln"]["w"], p["dec_ln"]["b"]), ncs
+
+    def _embed_tokens(self, p, tokens, pos0: int = 0):
+        x = p["embed"][tokens].astype(self.rt.compute_dtype)
+        pos = p["dec_pos"][pos0:pos0 + tokens.shape[1]]
+        return x + pos.astype(x.dtype)
+
+    def loss(self, p: Params, batch: Dict[str, jax.Array]):
+        cfg = self.cfg
+        enc_out = self.encode(p, batch["frames"])
+        cross_kv = self._cross_kv(p, enc_out)
+        x = self._embed_tokens(p, batch["tokens"], 0)
+        x, _ = self._decoder(p, x, cross_kv)
+        w = p["embed"].T
+        logits = jnp.einsum("bsd,dv->bsv", x, w)
+        loss = softmax_xent(logits, batch["labels"], cfg.vocab_size)
+        return loss, {"xent": loss}
+
+    def prefill(self, p: Params, batch: Dict[str, jax.Array]):
+        enc_out = self.encode(p, batch["frames"])
+        cross_kv = self._cross_kv(p, enc_out)
+        x = self._embed_tokens(p, batch["tokens"], 0)
+        x, self_kv = self._decoder(p, x, cross_kv, return_caches=True)
+        logits = jnp.einsum("bsd,dv->bsv", x[:, -1:], p["embed"].T)
+        return logits, {"self": self_kv, "cross": cross_kv}
+
+    def init_cache(self, batch: int, max_len: int):
+        cfg, rt = self.cfg, self.rt
+        dh = cfg.resolved_head_dim
+        h = pad_heads(cfg.num_heads, rt.tp_degree)
+        L = cfg.num_layers
+        se = cfg.encoder.max_source_len
+        z = lambda *shape: jnp.zeros(shape, rt.compute_dtype)
+        return {"self": (z(L, batch, max_len, h, dh),
+                         z(L, batch, max_len, h, dh)),
+                "cross": (z(L, batch, se, h, dh), z(L, batch, se, h, dh))}
+
+    def decode_step(self, p: Params, caches, token: jax.Array,
+                    cache_index: jax.Array):
+        x = p["embed"][token].astype(self.rt.compute_dtype)
+        pos = jax.lax.dynamic_slice_in_dim(p["dec_pos"], cache_index, 1)
+        x = x + pos.astype(x.dtype)[None]
+        x, ncs = self._decoder(p, x, caches["cross"], caches=caches["self"],
+                               cache_index=cache_index)
+        logits = jnp.einsum("bsd,dv->bsv", x, p["embed"].T)
+        return logits[:, 0], {"self": ncs, "cross": caches["cross"]}
+
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, Any]:
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        se = cfg.encoder.max_source_len
+        frames = jax.ShapeDtypeStruct((b, se, cfg.d_model),
+                                      self.rt.compute_dtype)
+        if shape.step in (StepKind.TRAIN, StepKind.PREFILL):
+            specs = {"frames": frames,
+                     "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+            if shape.step == StepKind.TRAIN:
+                specs["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+            return specs
+        return {"token": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+                "cache_index": jax.ShapeDtypeStruct((), jnp.int32)}

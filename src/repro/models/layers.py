@@ -1,0 +1,106 @@
+"""Shared building blocks: inits, norms, RoPE, embeddings.
+
+Parameters are plain dict pytrees. Leaf *paths* carry the semantics the
+sharding rules key on (see ``repro.dist.sharding``): e.g. any leaf whose path
+ends in ``.../wi`` is a column-parallel FFN kernel.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+VOCAB_MULTIPLE = 128
+
+
+def padded_vocab(vocab_size: int, multiple: int = VOCAB_MULTIPLE) -> int:
+    return ((vocab_size + multiple - 1) // multiple) * multiple
+
+
+def pad_heads(num_heads: int, degree: int) -> int:
+    """Pad head count up to a multiple of the TP degree (DESIGN.md §5)."""
+    return ((num_heads + degree - 1) // degree) * degree
+
+
+# ---------------------------------------------------------------------------
+# init
+
+
+def dense_init(rng: jax.Array, shape: Tuple[int, ...], dtype,
+               scale: Optional[float] = None) -> jax.Array:
+    fan_in = shape[0] if len(shape) > 1 else 1
+    std = scale if scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(rng, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(rng: jax.Array, shape: Tuple[int, ...], dtype) -> jax.Array:
+    return (jax.random.normal(rng, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * weight.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x: jax.Array, weight: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, dh); positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # (dh/2,)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,dh/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# losses
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array,
+                 vocab_size: int) -> jax.Array:
+    """Mean token cross-entropy; ignores label == -1 and padded vocab tail."""
+    logits = logits.astype(jnp.float32)
+    # mask padded vocab entries so they never receive probability mass
+    if logits.shape[-1] > vocab_size:
+        neg = jnp.full((logits.shape[-1] - vocab_size,), -1e9, logits.dtype)
+        logits = logits.at[..., vocab_size:].set(neg)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

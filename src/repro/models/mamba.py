@@ -1,0 +1,116 @@
+"""Mamba-1 selective SSM block (jamba's mixer).
+
+Training/prefill use ``jax.lax.associative_scan`` over time — the parallel
+formulation that (a) maps onto the TPU as log-depth batched ops instead of a
+sequential loop and (b) is fully visible to ``cost_analysis`` (no rolled
+``while``; DESIGN.md §6). Decode is the O(1)-state sequential update.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+
+Params = Dict[str, Any]
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    m = cfg.mamba
+    d_inner = m.expand * cfg.d_model
+    dt_rank = max(cfg.d_model // 16, 8)
+    return d_inner, m.d_state, m.d_conv, dt_rank
+
+
+def init_mamba(rng: jax.Array, cfg: ModelConfig, dtype) -> Params:
+    d = cfg.d_model
+    di, n, dc, dtr = _dims(cfg)
+    ks = jax.random.split(rng, 6)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di), dtype),
+        "conv_w": dense_init(ks[1], (dc, di), dtype, scale=0.5),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[2], (di, dtr + 2 * n), dtype),
+        "dt_proj": dense_init(ks[3], (dtr, di), dtype),
+        "dt_bias": jnp.full((di,), -4.6, dtype),           # softplus ~ 0.01
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, n + 1, dtype=jnp.float32), (di, n))).astype(dtype),
+        "D": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[4], (di, d), dtype),
+    }
+
+
+def _ssm_inputs(p: Params, xs: jax.Array, cfg: ModelConfig):
+    """xs: (B, S, d_inner) post-conv/act -> per-step (dA, dBx, C)."""
+    di, n, _, dtr = _dims(cfg)
+    proj = jnp.einsum("bsi,ir->bsr", xs, p["x_proj"])
+    dt, bmat, cmat = jnp.split(proj, [dtr, dtr + n], axis=-1)
+    delta = jax.nn.softplus(
+        jnp.einsum("bsr,ri->bsi", dt, p["dt_proj"]).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))                # (B,S,di)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))           # (di, n)
+    da = jnp.exp(delta[..., None] * a)                     # (B,S,di,n)
+    dbx = (delta[..., None] * bmat[:, :, None, :].astype(jnp.float32)
+           * xs[..., None].astype(jnp.float32))            # (B,S,di,n)
+    return da, dbx, cmat
+
+
+def _causal_conv(p: Params, x: jax.Array, dc: int) -> jax.Array:
+    pad = jnp.pad(x, ((0, 0), (dc - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1]] * p["conv_w"][i] for i in range(dc))
+    return jax.nn.silu(out + p["conv_b"])
+
+
+def mamba_forward(p: Params, x: jax.Array, cfg: ModelConfig, *,
+                  cache: Optional[Dict[str, jax.Array]] = None,
+                  return_state: bool = False):
+    """x: (B, S, d). cache = {"conv": (B, dc-1, di), "ssm": (B, di, n)}."""
+    di, n, dc, _ = _dims(cfg)
+    b, s, d = x.shape
+    xz = jnp.einsum("bsd,di->bsi", x, p["in_proj"])
+    xs, z = jnp.split(xz, 2, axis=-1)
+
+    if cache is not None:
+        assert s == 1
+        conv_st = jnp.concatenate([cache["conv"], xs], axis=1)  # (B, dc, di)
+        new_conv = conv_st[:, 1:]
+        xc = jax.nn.silu(
+            jnp.einsum("bci,ci->bi", conv_st, p["conv_w"]) + p["conv_b"]
+        )[:, None]                                          # (B,1,di)
+        da, dbx, cmat = _ssm_inputs(p, xc, cfg)
+        h = cache["ssm"].astype(jnp.float32) * da[:, 0] + dbx[:, 0]
+        y = jnp.einsum("bin,bn->bi", h, cmat[:, 0].astype(jnp.float32))
+        y = y[:, None] + p["D"].astype(jnp.float32) * xc.astype(jnp.float32)
+        out = jnp.einsum("bsi,id->bsd",
+                         (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype),
+                         p["out_proj"])
+        return out, {"conv": new_conv, "ssm": h.astype(cache["ssm"].dtype)}
+
+    xc = _causal_conv(p, xs, dc)
+    da, dbx, cmat = _ssm_inputs(p, xc, cfg)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (da, dbx), axis=1)  # (B,S,di,n)
+    y = jnp.einsum("bsin,bsn->bsi", h, cmat.astype(jnp.float32))
+    y = y + p["D"].astype(jnp.float32) * xc.astype(jnp.float32)
+    out = jnp.einsum("bsi,id->bsd",
+                     (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype),
+                     p["out_proj"])
+    state = None
+    if return_state:
+        state = {"conv": xs[:, -(dc - 1):].astype(x.dtype),
+                 "ssm": h[:, -1].astype(x.dtype)}
+    return out, state
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype) -> Dict[str, Any]:
+    di, n, dc, _ = _dims(cfg)
+    return {"conv": jnp.zeros((batch, dc - 1, di), dtype),
+            "ssm": jnp.zeros((batch, di, n), dtype)}

@@ -1,0 +1,21 @@
+"""``build_model(cfg, runtime)`` — dispatch to the right model class."""
+from __future__ import annotations
+
+from typing import Union
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models.encdec import EncDecLM
+from repro.models.transformer import Runtime, TransformerLM
+
+Model = Union[TransformerLM, EncDecLM]
+
+
+def build_model(cfg: ModelConfig, rt: Runtime = None) -> Model:
+    rt = rt or Runtime()
+    if cfg.encoder is not None:
+        return EncDecLM(cfg, rt)
+    return TransformerLM(cfg, rt)
+
+
+def build_from_run(run: RunConfig) -> Model:
+    return build_model(run.model, Runtime.from_run(run))

@@ -1,0 +1,299 @@
+"""The paper's SQNNs: GNMT (LSTM enc-dec + attention) and DeepSpeech2
+(conv + bi-GRU + CTC), in JAX (paper §VI-B).
+
+These power the *wallclock* reproduction: per-iteration runtime really is a
+function of the padded input SL (cells unroll via ``lax.scan`` over time).
+Reduced-size presets keep a CPU iteration in the tens of milliseconds while
+preserving the layer structure the paper profiles.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, dense_init, embed_init, softmax_xent
+
+
+# ---------------------------------------------------------------------------
+# cells
+
+
+def init_lstm(rng, d_in: int, d_h: int, dtype=jnp.float32) -> Params:
+    k1, k2 = jax.random.split(rng)
+    return {"w": dense_init(k1, (d_in + d_h, 4 * d_h), dtype),
+            "b": jnp.zeros((4 * d_h,), dtype)}
+
+
+def lstm_cell(p: Params, carry, x):
+    h, c = carry
+    z = jnp.concatenate([x, h], axis=-1) @ p["w"] + p["b"]
+    i, f, g, o = jnp.split(z, 4, axis=-1)
+    c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h = jax.nn.sigmoid(o) * jnp.tanh(c)
+    return (h, c), h
+
+
+def init_gru(rng, d_in: int, d_h: int, dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    return {"wzr": dense_init(k1, (d_in + d_h, 2 * d_h), dtype),
+            "wx": dense_init(k2, (d_in, d_h), dtype),
+            "wh": dense_init(k3, (d_h, d_h), dtype),
+            "b": jnp.zeros((2 * d_h,), dtype)}
+
+
+def gru_cell(p: Params, h, x):
+    zr = jnp.concatenate([x, h], axis=-1) @ p["wzr"] + p["b"]
+    z, r = jnp.split(jax.nn.sigmoid(zr), 2, axis=-1)
+    n = jnp.tanh(x @ p["wx"] + (r * h) @ p["wh"])
+    h = (1 - z) * n + z * h
+    return h, h
+
+
+def run_lstm(p: Params, xs: jax.Array, reverse: bool = False) -> jax.Array:
+    """xs: (B, S, d) -> (B, S, h)."""
+    b, s, _ = xs.shape
+    d_h = p["w"].shape[1] // 4
+    h0 = (jnp.zeros((b, d_h), xs.dtype), jnp.zeros((b, d_h), xs.dtype))
+    xs_t = jnp.moveaxis(xs, 1, 0)
+    _, hs = jax.lax.scan(lambda c, x: lstm_cell(p, c, x), h0, xs_t,
+                         reverse=reverse)
+    return jnp.moveaxis(hs, 0, 1)
+
+
+def run_gru(p: Params, xs: jax.Array, reverse: bool = False) -> jax.Array:
+    b, s, _ = xs.shape
+    d_h = p["wx"].shape[1]
+    h0 = jnp.zeros((b, d_h), xs.dtype)
+    xs_t = jnp.moveaxis(xs, 1, 0)
+    _, hs = jax.lax.scan(lambda c, x: gru_cell(p, c, x), h0, xs_t,
+                         reverse=reverse)
+    return jnp.moveaxis(hs, 0, 1)
+
+
+def bidir(run_fn, p_fwd: Params, p_bwd: Params, xs: jax.Array) -> jax.Array:
+    return jnp.concatenate([run_fn(p_fwd, xs), run_fn(p_bwd, xs, True)],
+                           axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# GNMT (paper §VI-B: 1 bi + 7 uni encoder LSTM, 8 decoder LSTM, attention,
+# FC). ``num_enc_uni``/``num_dec`` shrink for the CPU reproduction.
+
+
+@dataclass(frozen=True)
+class GNMTConfig:
+    vocab_size: int = 32_000
+    d_model: int = 1024
+    num_enc_uni: int = 7
+    num_dec: int = 8
+    dtype: Any = jnp.float32
+
+    def reduced(self) -> "GNMTConfig":
+        return dataclasses.replace(self, vocab_size=4096, d_model=160,
+                                   num_enc_uni=2, num_dec=3)
+
+
+class GNMT:
+    def __init__(self, cfg: GNMTConfig):
+        self.cfg = cfg
+
+    def init(self, rng) -> Params:
+        c = self.cfg
+        d = c.d_model
+        ks = iter(jax.random.split(rng, 16 + c.num_enc_uni + c.num_dec))
+        p: Params = {
+            "src_embed": embed_init(next(ks), (c.vocab_size, d), c.dtype),
+            "tgt_embed": embed_init(next(ks), (c.vocab_size, d), c.dtype),
+            "enc_bi_f": init_lstm(next(ks), d, d // 2, c.dtype),
+            "enc_bi_b": init_lstm(next(ks), d, d // 2, c.dtype),
+            "enc_uni": [init_lstm(next(ks), d, d, c.dtype)
+                        for _ in range(c.num_enc_uni)],
+            "dec": [init_lstm(next(ks), d if i else 2 * d, d, c.dtype)
+                    for i in range(c.num_dec)],
+            "attn_q": dense_init(next(ks), (d, d), c.dtype),
+            "out_proj": dense_init(next(ks), (2 * d, d), c.dtype),
+            "head": dense_init(next(ks), (d, c.vocab_size), c.dtype),
+        }
+        return p
+
+    def encode(self, p: Params, src: jax.Array) -> jax.Array:
+        x = p["src_embed"][src]
+        x = bidir(run_lstm, p["enc_bi_f"], p["enc_bi_b"], x)
+        for i, lp in enumerate(p["enc_uni"]):
+            y = run_lstm(lp, x)
+            x = x + y if i > 0 else y                      # residual stack
+        return x
+
+    def loss(self, p: Params, batch: Dict[str, jax.Array]):
+        c = self.cfg
+        enc = self.encode(p, batch["src"])                 # (B, Ss, d)
+        x = p["tgt_embed"][batch["tgt"]]                   # (B, St, d)
+        # first decoder layer consumes [emb; attention context]
+        q = run_lstm(p["dec"][0], jnp.concatenate(
+            [x, jnp.zeros_like(x)], axis=-1))
+        scores = jnp.einsum("btd,bsd->bts", q @ p["attn_q"], enc)
+        smask = (batch["src"] > 0)[:, None, :]
+        scores = jnp.where(smask, scores, -1e30)
+        ctx = jnp.einsum("bts,bsd->btd", jax.nn.softmax(scores, -1), enc)
+        h = jnp.tanh(jnp.concatenate([q, ctx], -1) @ p["out_proj"])
+        for i, lp in enumerate(p["dec"][1:]):
+            y = run_lstm(lp, h)
+            h = h + y
+        logits = h @ p["head"]
+        loss = softmax_xent(logits, batch["labels"], c.vocab_size)
+        return loss, {"xent": loss}
+
+    def make_batch(self, rng, batch_size: int, src_len: int, tgt_len: int):
+        import numpy as np
+        r = np.random.RandomState(rng)
+        v = self.cfg.vocab_size
+        return {
+            "src": jnp.asarray(
+                r.randint(1, v, size=(batch_size, src_len), dtype=np.int32)),
+            "tgt": jnp.asarray(
+                r.randint(1, v, size=(batch_size, tgt_len), dtype=np.int32)),
+            "labels": jnp.asarray(
+                r.randint(0, v, size=(batch_size, tgt_len), dtype=np.int32)),
+        }
+
+
+# ---------------------------------------------------------------------------
+# DeepSpeech2 (paper §VI-B: 2 conv, 5 bi-GRU, 1 FC, batch-norm, CTC)
+
+
+@dataclass(frozen=True)
+class DS2Config:
+    num_freq: int = 161
+    conv_channels: int = 32
+    d_h: int = 800
+    num_gru: int = 5
+    vocab_size: int = 29                                   # chars + blank
+    dtype: Any = jnp.float32
+
+    def reduced(self) -> "DS2Config":
+        return dataclasses.replace(self, num_freq=64, conv_channels=8,
+                                   d_h=96, num_gru=3)
+
+
+class DS2:
+    def __init__(self, cfg: DS2Config):
+        self.cfg = cfg
+
+    def init(self, rng) -> Params:
+        c = self.cfg
+        ks = iter(jax.random.split(rng, 8 + 2 * c.num_gru))
+        f_out = c.num_freq // 4
+        p: Params = {
+            "conv1": dense_init(next(ks), (11, 41, 1, c.conv_channels),
+                                c.dtype, scale=0.05),
+            "conv2": dense_init(next(ks), (11, 21, c.conv_channels,
+                                           c.conv_channels), c.dtype,
+                                scale=0.05),
+            "bn_scale": jnp.ones((c.conv_channels,), c.dtype),
+            "bn_bias": jnp.zeros((c.conv_channels,), c.dtype),
+            "gru": [
+                (init_gru(next(ks),
+                          f_out * c.conv_channels if i == 0 else 2 * c.d_h,
+                          c.d_h, c.dtype),
+                 init_gru(next(ks),
+                          f_out * c.conv_channels if i == 0 else 2 * c.d_h,
+                          c.d_h, c.dtype))
+                for i in range(c.num_gru)],
+            "head": dense_init(next(ks), (2 * c.d_h, c.vocab_size), c.dtype),
+        }
+        return p
+
+    def _frontend(self, p: Params, spec: jax.Array) -> jax.Array:
+        """spec: (B, T, F) -> (B, T/4, F/4 * C) via two strided convs."""
+        x = spec[:, None]                                  # (B, 1, T, F)
+        x = jax.lax.conv_general_dilated(
+            x, jnp.moveaxis(p["conv1"], (0, 1, 2, 3), (2, 3, 1, 0)),
+            window_strides=(2, 2), padding="SAME")
+        x = jax.nn.relu(x)
+        x = jax.lax.conv_general_dilated(
+            x, jnp.moveaxis(p["conv2"], (0, 1, 2, 3), (2, 3, 1, 0)),
+            window_strides=(2, 2), padding="SAME")
+        # batch-norm over (B, T, F) per channel
+        mu = jnp.mean(x, axis=(0, 2, 3), keepdims=True)
+        var = jnp.var(x, axis=(0, 2, 3), keepdims=True)
+        x = (x - mu) * jax.lax.rsqrt(var + 1e-5)
+        x = x * p["bn_scale"][None, :, None, None] \
+            + p["bn_bias"][None, :, None, None]
+        x = jax.nn.relu(x)
+        b, ch, t, f = x.shape
+        return jnp.moveaxis(x, 1, 3).reshape(b, t, f * ch)
+
+    def logits(self, p: Params, spec: jax.Array) -> jax.Array:
+        x = self._frontend(p, spec)
+        for pf, pb in p["gru"]:
+            x = bidir(run_gru, pf, pb, x)
+        return x @ p["head"]
+
+    def loss(self, p: Params, batch: Dict[str, jax.Array]):
+        logits = self.logits(p, batch["spec"])
+        loss = ctc_loss(logits, batch["labels"], batch["label_lens"])
+        return loss, {"ctc": loss}
+
+    def make_batch(self, rng, batch_size: int, num_frames: int,
+                   label_len: int = 0):
+        import numpy as np
+        r = np.random.RandomState(rng)
+        c = self.cfg
+        label_len = label_len or max(2, num_frames // 32)
+        return {
+            "spec": jnp.asarray(r.randn(batch_size, num_frames,
+                                        c.num_freq).astype(np.float32)),
+            "labels": jnp.asarray(r.randint(
+                1, c.vocab_size, size=(batch_size, label_len),
+                dtype=np.int32)),
+            "label_lens": jnp.full((batch_size,), label_len, jnp.int32),
+        }
+
+
+# ---------------------------------------------------------------------------
+# CTC (log-semiring forward algorithm; blank = 0)
+
+
+def ctc_loss(logits: jax.Array, labels: jax.Array,
+             label_lens: jax.Array) -> jax.Array:
+    """logits: (B, T, V); labels: (B, L) (0 = pad); mean -log p(labels)."""
+    b, t, v = logits.shape
+    l = labels.shape[1]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    # extended sequence z' = [blank, l1, blank, l2, ..., blank]: (B, 2L+1)
+    ext = jnp.zeros((b, 2 * l + 1), jnp.int32)
+    ext = ext.at[:, 1::2].set(labels)
+    ext_valid = jnp.arange(2 * l + 1)[None] < (2 * label_lens + 1)[:, None]
+    # allow skip from s-2 when ext[s] != blank and ext[s] != ext[s-2]
+    can_skip = jnp.concatenate(
+        [jnp.zeros((b, 2), bool),
+         (ext[:, 2:] != 0) & (ext[:, 2:] != ext[:, :-2])], axis=1)
+
+    neg = jnp.float32(-1e30)
+    alpha0 = jnp.full((b, 2 * l + 1), neg)
+    alpha0 = alpha0.at[:, 0].set(logp[:, 0, 0])
+    alpha0 = alpha0.at[:, 1].set(
+        jnp.take_along_axis(logp[:, 0], ext[:, 1:2], axis=1)[:, 0])
+
+    def step(alpha, logp_t):
+        stay = alpha
+        prev1 = jnp.concatenate([jnp.full((b, 1), neg), alpha[:, :-1]], 1)
+        prev2 = jnp.concatenate([jnp.full((b, 2), neg), alpha[:, :-2]], 1)
+        prev2 = jnp.where(can_skip, prev2, neg)
+        merged = jnp.logaddexp(jnp.logaddexp(stay, prev1), prev2)
+        emit = jnp.take_along_axis(logp_t, ext, axis=1)
+        alpha = jnp.where(ext_valid, merged + emit, neg)
+        return alpha, None
+
+    alpha, _ = jax.lax.scan(step, alpha0,
+                            jnp.moveaxis(logp[:, 1:], 1, 0))
+    last = 2 * label_lens
+    ll = jnp.logaddexp(
+        jnp.take_along_axis(alpha, last[:, None], axis=1)[:, 0],
+        jnp.take_along_axis(alpha, jnp.maximum(last - 1, 0)[:, None],
+                            axis=1)[:, 0])
+    return -jnp.mean(ll)

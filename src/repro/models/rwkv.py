@@ -1,0 +1,226 @@
+"""RWKV-6 (Finch): time-mix with data-dependent decay + channel-mix.
+
+Sequence mixing is computed in *chunked linear-attention* form: within a chunk
+the recurrence is expanded into masked matmuls (MXU-friendly, fully visible to
+cost analysis); across chunks the per-head (dh x dh) states compose through an
+``associative_scan`` over affine maps. This is the TPU-native analogue of the
+CUDA wkv kernels (DESIGN.md §3); ``repro.kernels.rwkv6_wkv`` implements the
+same blocking in Pallas and is validated against the sequential oracle here.
+
+Numerics: per-step log-decay is clamped to [-1, 0) so intra-chunk decay
+products stay representable in fp32 (documented deviation, DESIGN.md §8).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+
+Params = Dict[str, Any]
+
+W_LORA_DIM = 64
+CHUNK = 64
+
+
+def _dims(cfg: ModelConfig, tp: int = 1) -> Tuple[int, int]:
+    """Head count padded to the TP degree (DESIGN.md §5: rwkv6-3b has 40
+    heads; under 16-way TP we pad to 48 so shards hold whole heads)."""
+    dh = cfg.rwkv_head_dim
+    heads = cfg.d_model // dh
+    if tp > 1 and heads % tp:
+        heads = ((heads + tp - 1) // tp) * tp
+    return heads, dh
+
+
+def init_time_mix(rng: jax.Array, cfg: ModelConfig, dtype,
+                  tp: int = 1) -> Params:
+    d = cfg.d_model
+    h, dh = _dims(cfg, tp)
+    da = h * dh                                            # padded inner dim
+    ks = jax.random.split(rng, 10)
+    return {
+        "mu_r": jnp.full((d,), 0.5, dtype),
+        "mu_k": jnp.full((d,), 0.5, dtype),
+        "mu_v": jnp.full((d,), 0.5, dtype),
+        "mu_w": jnp.full((d,), 0.5, dtype),
+        "mu_g": jnp.full((d,), 0.5, dtype),
+        "w_r": dense_init(ks[0], (d, da), dtype),
+        "w_k": dense_init(ks[1], (d, da), dtype),
+        "w_v": dense_init(ks[2], (d, da), dtype),
+        "w_g": dense_init(ks[3], (d, da), dtype),
+        "w_o": dense_init(ks[4], (da, d), dtype),
+        # data-dependent decay: w = exp(-exp(w0 + tanh(x A1) A2))
+        "w0": jnp.full((da,), -2.0, dtype),
+        "w_a1": dense_init(ks[5], (d, W_LORA_DIM), dtype),
+        "w_a2": dense_init(ks[6], (W_LORA_DIM, da), dtype, scale=0.1),
+        "u": dense_init(ks[7], (da,), dtype, scale=0.5),   # per-channel bonus
+        "ln_w": jnp.ones((h, dh), dtype),                  # per-head groupnorm
+        "ln_b": jnp.zeros((h, dh), dtype),
+    }
+
+
+def init_channel_mix(rng: jax.Array, cfg: ModelConfig, dtype) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(rng, 3)
+    return {
+        "mu_k": jnp.full((d,), 0.5, dtype),
+        "mu_r": jnp.full((d,), 0.5, dtype),
+        "w_k": dense_init(ks[0], (d, f), dtype),
+        "w_v": dense_init(ks[1], (f, d), dtype),
+        "w_r": dense_init(ks[2], (d, d), dtype),
+    }
+
+
+def _shift(x: jax.Array, last: Optional[jax.Array]) -> jax.Array:
+    """x_{t-1} along seq; ``last`` is the carried token for decode."""
+    if last is not None:
+        return last[:, None]
+    return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+
+
+def _log_decay(p: Params, xw: jax.Array) -> jax.Array:
+    ww = (p["w0"].astype(jnp.float32)
+          + jnp.einsum("bsl,ld->bsd",
+                       jnp.tanh(jnp.einsum("bsd,dl->bsl",
+                                           xw.astype(jnp.float32),
+                                           p["w_a1"].astype(jnp.float32))),
+                       p["w_a2"].astype(jnp.float32)))
+    return jnp.clip(-jnp.exp(ww), -1.0, -1e-6)             # log w per channel
+
+
+def wkv6_sequential(r, k, v, lw, u, state):
+    """Oracle recurrence. r,k,v,lw: (B,S,H,dh) fp32; state: (B,H,dh,dh).
+    Returns (y, final_state). Used by tests and decode."""
+    w = jnp.exp(lw)
+
+    def step(s, xs):
+        rt, kt, vt, wt = xs
+        kv = kt[..., :, None] * vt[..., None, :]            # (B,H,dh,dh)
+        # y = r . (S + diag(u) k v^T)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, s) + \
+            jnp.einsum("bhk,bhk,bhv->bhv", rt, u[None] * kt, vt)
+        s = wt[..., :, None] * s + kv
+        return s, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    # reshape u to (H, dh)
+    final, ys = jax.lax.scan(lambda s, x: step(s, x), state, xs)
+    return jnp.moveaxis(ys, 0, 1), final
+
+
+def wkv6_chunked(r, k, v, lw, u, state0, chunk: int = CHUNK):
+    """Chunked-parallel wkv. Shapes (B,S,H,dh) fp32, state0 (B,H,dh,dh)."""
+    b, s, h, dh = r.shape
+    assert s % chunk == 0, (s, chunk)
+    n = s // chunk
+    rc, kc, vc, lwc = (t.reshape(b, n, chunk, h, dh) for t in (r, k, v, lw))
+    cs = jnp.cumsum(lwc, axis=2)                           # inclusive cumsum
+    total = cs[:, :, -1]                                   # (B,n,H,dh)
+    # within-chunk pair decays: exp(cs_{i-1} - cs_j), j < i  (<= 1, safe)
+    dec_q = jnp.exp(cs - lwc)                              # exp(cs_{i-1})
+    dec_k = jnp.exp(-cs)                                   # exp(-cs_j) (>=1; |cs|<=C)
+    rq = rc * dec_q
+    kk = kc * dec_k
+    att = jnp.einsum("bnihk,bnjhk->bnhij", rq, kk)         # (B,n,H,C,C)
+    idx = jnp.arange(chunk)
+    mask = (idx[:, None] > idx[None, :]).astype(att.dtype)
+    diag = jnp.einsum("bnihk,bnihk->bnih", rc, u.reshape(1, 1, 1, h, dh) * kc)
+    y_intra = jnp.einsum("bnhij,bnjhv->bnihv", att * mask, vc)
+    y_intra = y_intra + diag[..., None] * vc
+
+    # inter-chunk: U_c = sum_j (k_j * exp(total - cs_j)) v_j^T
+    kdec = kc * jnp.exp(total[:, :, None] - cs)
+    u_c = jnp.einsum("bnjhk,bnjhv->bnhkv", kdec, vc)       # (B,n,H,dh,dh)
+    d_c = jnp.exp(total)                                   # (B,n,H,dh)
+
+    def combine(e1, e2):
+        d1, u1 = e1
+        d2, u2 = e2
+        return d1 * d2, u1 * d2[..., None] + u2
+
+    dall, uall = jax.lax.associative_scan(combine, (d_c, u_c), axis=1)
+    # state entering chunk i: scan result of chunks < i, composed with state0
+    d_prev = jnp.concatenate(
+        [jnp.ones_like(dall[:, :1]), dall[:, :-1]], axis=1)
+    u_prev = jnp.concatenate(
+        [jnp.zeros_like(uall[:, :1]), uall[:, :-1]], axis=1)
+    s_in = state0[:, None] * d_prev[..., None] + u_prev    # (B,n,H,dh,dh)
+    y_inter = jnp.einsum("bnihk,bnhkv->bnihv", rq, s_in)
+    y = (y_intra + y_inter).reshape(b, s, h, dh)
+    s_final = state0 * dall[:, -1][..., None] + uall[:, -1]
+    return y, s_final
+
+
+def time_mix_forward(p: Params, x: jax.Array, cfg: ModelConfig, *,
+                     cache: Optional[Dict[str, jax.Array]] = None,
+                     return_state: bool = False, chunk: int = CHUNK):
+    dh = cfg.rwkv_head_dim
+    h = p["ln_w"].shape[0]                                 # padded head count
+    b, s, d = x.shape
+    last = cache["shift"] if cache is not None else None
+    xx = _shift(x, last) - x
+    xr = x + xx * p["mu_r"]
+    xk = x + xx * p["mu_k"]
+    xv = x + xx * p["mu_v"]
+    xw = x + xx * p["mu_w"]
+    xg = x + xx * p["mu_g"]
+    f32 = jnp.float32
+    r = jnp.einsum("bsd,de->bse", xr, p["w_r"]).astype(f32).reshape(b, s, h, dh)
+    k = jnp.einsum("bsd,de->bse", xk, p["w_k"]).astype(f32).reshape(b, s, h, dh)
+    v = jnp.einsum("bsd,de->bse", xv, p["w_v"]).astype(f32).reshape(b, s, h, dh)
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["w_g"]))
+    lw = _log_decay(p, xw).reshape(b, s, h, dh)
+    u = p["u"].astype(f32).reshape(h, dh)
+
+    if cache is not None:
+        assert s == 1
+        y, s_new = wkv6_sequential(r, k, v, lw, u,
+                                   cache["state"].astype(f32))
+        new_cache = {"shift": x[:, -1], "state": s_new.astype(x.dtype)}
+    else:
+        state0 = jnp.zeros((b, h, dh, dh), f32)
+        if s % chunk == 0 and s > chunk:
+            y, s_fin = wkv6_chunked(r, k, v, lw, u, state0, chunk)
+        else:
+            y, s_fin = wkv6_sequential(r, k, v, lw, u, state0)
+        new_cache = ({"shift": x[:, -1], "state": s_fin.astype(x.dtype)}
+                     if return_state else None)
+
+    # per-head groupnorm, gate, out-proj
+    mu = jnp.mean(y, axis=-1, keepdims=True)
+    var = jnp.var(y, axis=-1, keepdims=True)
+    yn = (y - mu) * jax.lax.rsqrt(var + 1e-5)
+    yn = yn * p["ln_w"].astype(f32) + p["ln_b"].astype(f32)
+    out = (yn.reshape(b, s, h * dh).astype(x.dtype) * g)
+    return jnp.einsum("bsa,ad->bsd", out, p["w_o"]), new_cache
+
+
+def channel_mix_forward(p: Params, x: jax.Array, cfg: ModelConfig, *,
+                        cache: Optional[Dict[str, jax.Array]] = None,
+                        return_state: bool = False):
+    last = cache["shift"] if cache is not None else None
+    xx = _shift(x, last) - x
+    xk = x + xx * p["mu_k"]
+    xr = x + xx * p["mu_r"]
+    kk = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", xk, p["w_k"])))
+    kv = jnp.einsum("bsf,fd->bsd", kk, p["w_v"])
+    out = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["w_r"])) * kv
+    new_cache = None
+    if cache is not None or return_state:
+        new_cache = {"shift": x[:, -1]}
+    return out, new_cache
+
+
+def init_time_mix_cache(cfg: ModelConfig, batch: int, dtype,
+                        tp: int = 1) -> Dict[str, Any]:
+    h, dh = _dims(cfg, tp)
+    return {"shift": jnp.zeros((batch, cfg.d_model), dtype),
+            "state": jnp.zeros((batch, h, dh, dh), dtype)}
+
+
+def init_channel_mix_cache(cfg: ModelConfig, batch: int, dtype):
+    return {"shift": jnp.zeros((batch, cfg.d_model), dtype)}

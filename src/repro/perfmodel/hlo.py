@@ -1,0 +1,113 @@
+"""Parse collective traffic out of compiled HLO text.
+
+``cost_analysis`` has no collective-bytes entry, so we sum operand/result
+sizes of every collective op in the (SPMD, per-device) module and convert to
+on-the-wire bytes with standard ring-algorithm factors (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# result = <shape> <op>(<operand shapes ...>)
+_OP_RE = re.compile(
+    r"=\s+((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\][^\s]*))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+# wire-bytes factor per buffer byte (ring algorithms, large k limit)
+_WIRE_FACTOR = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+@dataclass
+class CollectiveStats:
+    count: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
+    buffer_bytes: Dict[str, int] = field(
+        default_factory=lambda: defaultdict(int))
+
+    @property
+    def wire_bytes(self) -> float:
+        return sum(_WIRE_FACTOR[k] * v for k, v in self.buffer_bytes.items())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count.values())
+
+    def scaled(self, factor: float) -> "CollectiveStats":
+        out = CollectiveStats()
+        for k in self.count:
+            out.count[k] = int(self.count[k] * factor)
+            out.buffer_bytes[k] = int(self.buffer_bytes[k] * factor)
+        return out
+
+    def minus(self, other: "CollectiveStats") -> "CollectiveStats":
+        out = CollectiveStats()
+        for k in set(self.count) | set(other.count):
+            out.count[k] = self.count[k] - other.count[k]
+            out.buffer_bytes[k] = (self.buffer_bytes[k]
+                                   - other.buffer_bytes[k])
+        return out
+
+    def plus(self, other: "CollectiveStats") -> "CollectiveStats":
+        out = CollectiveStats()
+        for k in set(self.count) | set(other.count):
+            out.count[k] = self.count[k] + other.count[k]
+            out.buffer_bytes[k] = (self.buffer_bytes[k]
+                                   + other.buffer_bytes[k])
+        return out
+
+    def to_dict(self) -> Dict[str, Dict[str, int]]:
+        return {k: {"count": self.count[k], "bytes": self.buffer_bytes[k]}
+                for k in sorted(self.count)}
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum per-device buffer bytes for each collective kind.
+
+    For all-gather we count the *result* shape (what lands per device); for
+    the others the result ~= operand. ``-done`` ops are skipped so async
+    pairs are counted once.
+    """
+    stats = CollectiveStats()
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        b = _shape_bytes(shape_str)
+        if kind == "reduce-scatter":
+            # result is the scattered shard; wire bytes ~ full operand
+            # (approximate: result * k; we lack k here, use operand from
+            # the argument list if parsable)
+            tail = hlo_text[m.end():m.end() + 400]
+            ms = _SHAPE_RE.search(tail)
+            if ms:
+                b = _shape_bytes(ms.group(0))
+        stats.count[kind] += 1
+        stats.buffer_bytes[kind] += b
+    return stats

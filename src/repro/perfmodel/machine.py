@@ -1,0 +1,54 @@
+"""Machine models: the TPU v5e target + paper-analog hardware configs.
+
+The paper evaluates SeqPoint's architecture-independence across five hardware
+configs (Table II: GCLK, CU count, L1/L2 caches). Our analogs scale the
+analytic machine terms: GCLK/CU -> peak FLOP/s, caches -> effective HBM
+bandwidth. The wallclock backend additionally uses *real* CPU-thread configs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+
+@dataclass(frozen=True)
+class MachineConfig:
+    name: str
+    peak_flops: float          # per chip, bf16
+    hbm_bw: float              # bytes/s per chip
+    ici_bw: float              # bytes/s per link
+    chips: int = 1
+
+    def step_time(self, flops: float, bytes_hbm: float,
+                  bytes_coll: float) -> float:
+        """Roofline-max execution model (per-device quantities)."""
+        return max(flops / self.peak_flops, bytes_hbm / self.hbm_bw,
+                   bytes_coll / self.ici_bw)
+
+    def step_time_sum(self, flops: float, bytes_hbm: float,
+                      bytes_coll: float) -> float:
+        """Pessimistic no-overlap model; brackets the truth with step_time."""
+        return (flops / self.peak_flops + bytes_hbm / self.hbm_bw
+                + bytes_coll / self.ici_bw)
+
+
+TPU_V5E = MachineConfig("tpu-v5e", peak_flops=197e12, hbm_bw=819e9,
+                        ici_bw=50e9)
+TPU_V5E_HBM_GB = 16.0
+
+# Paper Table II analogs (#1 is the reference config).
+PAPER_CONFIGS: Dict[str, MachineConfig] = {
+    "config1": TPU_V5E,
+    # GCLK 1.6 GHz -> 852 MHz: compute scales, memory system unchanged
+    "config2": MachineConfig("gclk-0.53x", peak_flops=197e12 * 852 / 1600,
+                             hbm_bw=819e9, ici_bw=50e9),
+    # 64 CU -> 16 CU analog: quarter the compute units
+    "config3": MachineConfig("cores-0.25x", peak_flops=197e12 / 4,
+                             hbm_bw=819e9, ici_bw=50e9),
+    # L1 off analog: effective bandwidth for reuse-heavy ops drops
+    "config4": MachineConfig("l1-off", peak_flops=197e12, hbm_bw=819e9 * 0.6,
+                             ici_bw=50e9),
+    # L2 off analog: bandwidth-bound everywhere
+    "config5": MachineConfig("l2-off", peak_flops=197e12, hbm_bw=819e9 * 0.35,
+                             ici_bw=50e9),
+}

@@ -1,0 +1,85 @@
+"""Minimal batched serving engine: continuous prefill+decode over a request
+queue with a fixed-shape KV cache (the decode_32k dry-run cell's runtime
+counterpart).
+
+SeqPoint's insight applies at serving too (paper §VII-E): per-request
+prefill cost is keyed by prompt SL, so the engine logs (SL, latency) and
+``seqpoints()`` summarizes a serving trace the same way training epochs are
+summarized.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.profile import EpochLog
+from repro.core.seqpoint import SeqPointSet, select_seqpoints
+from repro.models.model_zoo import Model
+
+
+@dataclass
+class Request:
+    prompt: np.ndarray            # (S,) int32
+    max_new_tokens: int = 16
+    output: List[int] = field(default_factory=list)
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params, *, batch_size: int = 4,
+                 max_len: int = 512, sl_granularity: int = 32):
+        self.model = model
+        self.params = params
+        self.batch_size = batch_size
+        self.max_len = max_len
+        self.gran = sl_granularity
+        self._prefill = jax.jit(model.prefill)
+        self._decode = jax.jit(model.decode_step, donate_argnums=1)
+        self.log = EpochLog(meta={"kind": "serve"})
+
+    def _pad(self, sl: int) -> int:
+        return min(self.max_len, -(-sl // self.gran) * self.gran)
+
+    def run_batch(self, requests: List[Request]) -> List[Request]:
+        """Prefill a batch of same-padded-SL requests, then decode."""
+        assert len(requests) <= self.batch_size
+        while len(requests) < self.batch_size:            # pad batch
+            requests.append(Request(prompt=np.zeros(4, np.int32),
+                                    max_new_tokens=0))
+        sl = self._pad(max(len(r.prompt) for r in requests))
+        toks = np.zeros((self.batch_size, sl), np.int32)
+        for i, r in enumerate(requests):
+            toks[i, -len(r.prompt):] = r.prompt[:sl]
+        t0 = time.perf_counter()
+        logits, caches = self._prefill(self.params,
+                                       {"tokens": jnp.asarray(toks)})
+        jax.block_until_ready(logits)
+        self.log.append(sl, time.perf_counter() - t0)
+
+        # decode greedily; caches from prefill hold exactly sl entries, so
+        # rebuild into the fixed-size serving cache
+        full = self.model.init_cache(self.batch_size, self.max_len)
+        full = jax.tree.map(
+            lambda dst, src: jax.lax.dynamic_update_slice_in_dim(
+                dst, src.astype(dst.dtype), 0, axis=2)
+            if dst.ndim >= 3 and dst.shape[:2] == src.shape[:2]
+            and dst.shape[3:] == src.shape[3:] else src.astype(dst.dtype),
+            full, caches)
+        token = jnp.argmax(logits[:, -1] if logits.ndim == 3 else logits,
+                           axis=-1).astype(jnp.int32)[:, None]
+        n_steps = max((r.max_new_tokens for r in requests), default=0)
+        for step in range(n_steps):
+            for i, r in enumerate(requests):
+                if step < r.max_new_tokens:
+                    r.output.append(int(token[i, 0]))
+            logits, full = self._decode(self.params, full, token,
+                                        jnp.asarray(sl + step, jnp.int32))
+            token = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return requests
+
+    def seqpoints(self, **kw) -> SeqPointSet:
+        return select_seqpoints(self.log, **kw)

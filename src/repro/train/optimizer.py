@@ -1,0 +1,93 @@
+"""AdamW with configurable moment dtype + global-norm clipping + schedule.
+
+Moments inherit the parameter's sharding (same tree structure), so FSDP
+configs automatically get ZeRO-sharded optimizer state. ``moment_dtype=
+bfloat16`` halves optimizer HBM — required for deepseek-v3-scale cells
+(DESIGN.md §8.4).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import OptimizerConfig
+
+Params = Any
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: Params
+    v: Params
+
+
+def init_opt_state(params: Params, cfg: OptimizerConfig) -> OptState:
+    dt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return OptState(step=jnp.zeros((), jnp.int32),
+                    m=jax.tree.map(zeros, params),
+                    v=jax.tree.map(zeros, params))
+
+
+def lr_schedule(cfg: OptimizerConfig, total_steps: int
+                ) -> Callable[[jax.Array], jax.Array]:
+    def fn(step: jax.Array) -> jax.Array:
+        warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+        frac = jnp.clip((step - cfg.warmup_steps)
+                        / max(total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return cfg.lr * warm * (0.1 + 0.9 * cos)
+    return fn
+
+
+def global_norm(tree: Params) -> jax.Array:
+    sq = jax.tree.map(
+        lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))), tree)
+    return jnp.sqrt(jax.tree.reduce(jnp.add, sq, jnp.zeros((), jnp.float32)))
+
+
+def _decayable(path) -> bool:
+    last = str(path[-1].key) if hasattr(path[-1], "key") else str(path[-1])
+    return not any(t in last for t in ("norm", "ln_", "bias", "b_", "mu_",
+                                       "w0", "dt_bias"))
+
+
+def adamw_update(grads: Params, state: OptState, params: Params,
+                 cfg: OptimizerConfig, lr: jax.Array
+                 ) -> Tuple[Params, OptState, Dict[str, jax.Array]]:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.grad_clip > 0 else jnp.ones(())
+    step = state.step + 1
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    # Update arithmetic runs in the moment dtype for bf16-moment configs
+    # (halves the elementwise-chain temporaries; >100B models only —
+    # DESIGN.md §8.4). Variance epsilon guards bf16 sqrt.
+    cdt = jnp.float32 if mdt == jnp.float32 else jnp.bfloat16
+
+    def upd(path, p, g, m, v):
+        g = g.astype(cdt) * scale.astype(cdt)
+        mn = b1 * m.astype(cdt) + (1 - b1) * g
+        vn = b2 * v.astype(cdt) + (1 - b2) * jnp.square(g)
+        mhat = mn / bc1.astype(cdt)
+        vhat = vn / bc2.astype(cdt)
+        eps = cfg.eps if cdt == jnp.float32 else max(cfg.eps, 1e-5)
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        if cfg.weight_decay and _decayable(path):
+            delta = delta + cfg.weight_decay * p.astype(cdt)
+        new_p = p.astype(cdt) - lr.astype(cdt) * delta
+        return (new_p.astype(p.dtype), mn.astype(mdt), vn.astype(mdt))
+
+    out = jax.tree_util.tree_map_with_path(upd, params, grads,
+                                           state.m, state.v)
+    outer = jax.tree_util.tree_structure(params)
+    inner = jax.tree_util.tree_structure((0, 0, 0))
+    new_p, new_m, new_v = jax.tree_util.tree_transpose(outer, inner, out)
+    return new_p, OptState(step=step, m=new_m, v=new_v), \
+        {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,96 @@
+"""Train/serve step builders: the functions jit/lowered by launch + trainer.
+
+``build_train_step`` returns a pure ``(train_state, batch) -> (train_state,
+metrics)`` with optional microbatch gradient accumulation (scan over
+microbatches — compute/comm overlap is left to XLA's latency-hiding
+scheduler; each microbatch's gradient all-reduce can overlap the next
+microbatch's backward).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RunConfig, StepKind
+from repro.models.model_zoo import Model
+from repro.train.optimizer import (
+    OptState,
+    adamw_update,
+    init_opt_state,
+    lr_schedule,
+)
+
+Params = Any
+
+
+class TrainState(NamedTuple):
+    params: Params
+    opt: OptState
+
+
+def init_train_state(model: Model, run: RunConfig, rng: jax.Array
+                     ) -> TrainState:
+    params = model.init(rng)
+    return TrainState(params=params, opt=init_opt_state(params,
+                                                        run.optimizer))
+
+
+def build_train_step(model: Model, run: RunConfig, total_steps: int = 10_000
+                     ) -> Callable[[TrainState, Dict[str, jax.Array]],
+                                   Tuple[TrainState, Dict[str, jax.Array]]]:
+    lr_fn = lr_schedule(run.optimizer, total_steps)
+    nmicro = max(run.microbatches, 1)
+    # dry-run roofline mode unrolls the accumulation scan so cost_analysis
+    # counts every microbatch (DESIGN.md §6)
+    scan_unroll = nmicro if run.unroll_layers else 1
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return loss, metrics
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]):
+        if nmicro == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(state.params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape((nmicro, x.shape[0] // nmicro)
+                                    + x.shape[1:]), batch)
+
+            def acc(carry, mb):
+                (loss_a, grads_a) = carry
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(state.params, mb)
+                grads = jax.tree.map(jnp.add, grads_a, grads)
+                return (loss_a + loss, grads), metrics
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (loss, grads), metrics = jax.lax.scan(
+                acc, (jnp.zeros((), jnp.float32), zeros), micro,
+                unroll=scan_unroll)
+            loss = loss / nmicro
+            grads = jax.tree.map(lambda g: g / nmicro, grads)
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+
+        lr = lr_fn(state.opt.step)
+        new_params, new_opt, opt_metrics = adamw_update(
+            grads, state.opt, state.params, run.optimizer, lr)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return TrainState(new_params, new_opt), metrics
+
+    return train_step
+
+
+def build_serve_step(model: Model, run: RunConfig, kind: StepKind):
+    """prefill: batch -> (logits, caches). decode: one-token step."""
+    if kind == StepKind.PREFILL:
+        def prefill(params, batch):
+            return model.prefill(params, batch)
+        return prefill
+
+    def decode(params, caches, token, cache_index):
+        return model.decode_step(params, caches, token, cache_index)
+    return decode

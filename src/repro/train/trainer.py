@@ -1,0 +1,103 @@
+"""Training loop: auto-resume, async checkpoints, straggler detection,
+SeqPoint epoch logging as a first-class hook.
+
+The trainer logs every iteration's (padded SL, wallclock) into an
+``EpochLog`` — after one epoch, ``seqpoints()`` hands back the
+representative iterations, which is how a fleet user would profile a new
+hardware/software config for this exact (model, dataset, batch-size)
+combination without re-running the epoch (paper §V-C step 1 integrated at
+the point the data already flows).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro.ckpt.checkpoint import CheckpointManager
+from repro.configs.base import RunConfig
+from repro.core.profile import EpochLog
+from repro.core.seqpoint import SeqPointSet, select_seqpoints
+from repro.data.batching import DataIterator
+from repro.models.model_zoo import Model
+from repro.train.train_step import TrainState, build_train_step, \
+    init_train_state
+
+
+@dataclass
+class TrainerReport:
+    steps: int = 0
+    resumed_from: Optional[int] = None
+    losses: list = field(default_factory=list)
+    step_times: list = field(default_factory=list)
+    stragglers: int = 0
+    epoch_log: Optional[EpochLog] = None
+
+
+class Trainer:
+    def __init__(self, model: Model, run: RunConfig, data: DataIterator, *,
+                 ckpt_dir: Optional[str] = None, ckpt_every: int = 50,
+                 straggler_factor: float = 3.0, total_steps: int = 1000):
+        self.model = model
+        self.run = run
+        self.data = data
+        self.ckpt = CheckpointManager(ckpt_dir) if ckpt_dir else None
+        self.ckpt_every = ckpt_every
+        self.straggler_factor = straggler_factor
+        self.step_fn = jax.jit(build_train_step(model, run, total_steps),
+                               donate_argnums=0)
+        self.epoch_log = EpochLog(meta={"model": run.model.name})
+
+    def init_or_resume(self, rng: jax.Array) -> tuple[TrainState, int]:
+        state = init_train_state(self.model, self.run, rng)
+        start = 0
+        if self.ckpt is not None and self.ckpt.latest_step() is not None:
+            state, extra = self.ckpt.restore(state)
+            start = int(extra.get("step", self.ckpt.latest_step()))
+            if "data_state" in extra:
+                self.data.restore(extra["data_state"])
+        return state, start
+
+    def train(self, num_steps: int, rng: Optional[jax.Array] = None
+              ) -> TrainerReport:
+        rng = jax.random.PRNGKey(self.run.seed) if rng is None else rng
+        state, start = self.init_or_resume(rng)
+        report = TrainerReport(resumed_from=start or None)
+        it: Iterator = iter(self.data)
+        median_t: Optional[float] = None
+        for step in range(start, start + num_steps):
+            tokens, labels, sl = next(it)
+            batch = {"tokens": jax.numpy.asarray(tokens),
+                     "labels": jax.numpy.asarray(labels)}
+            t0 = time.perf_counter()
+            state, metrics = self.step_fn(state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+            # straggler mitigation: per-SL baseline; a step far beyond the
+            # running median of its SL marks a straggler (on real fleets
+            # this triggers hot-spare promotion; here we count + log)
+            same_sl = [t for s, t in zip(report.losses, report.step_times)]
+            if median_t is not None and dt > self.straggler_factor * median_t:
+                report.stragglers += 1
+            median_t = dt if median_t is None else 0.9 * median_t + 0.1 * dt
+            report.losses.append(float(metrics["loss"]))
+            report.step_times.append(dt)
+            self.epoch_log.append(sl, dt)
+            if self.ckpt is not None and (step + 1) % self.ckpt_every == 0:
+                self.ckpt.save_async(step + 1, state,
+                                     extra={"step": step + 1,
+                                            "data_state": self.data.state()})
+        if self.ckpt is not None:
+            self.ckpt.wait()
+            self.ckpt.save(start + num_steps, state,
+                           extra={"step": start + num_steps,
+                                  "data_state": self.data.state()})
+        report.steps = num_steps
+        report.epoch_log = self.epoch_log
+        return report
+
+    def seqpoints(self, **kw) -> SeqPointSet:
+        return select_seqpoints(self.epoch_log, **kw)

@@ -1,0 +1,7 @@
+import os
+import sys
+
+# tests import the package from src/ without installation; do NOT set
+# XLA device-count flags here — smoke tests must see 1 device (multi-device
+# tests spawn subprocesses, dryrun sets its own flags).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,73 @@
+"""Subprocess helper: verify sharded execution matches single-device math.
+
+Runs a tiny model on an 8-device (2 data x 4 model) host mesh, executing a
+REAL train-loss computation with the production sharding rules, and compares
+against the unsharded result. Exercises the shard_map MoE path end to end.
+Prints MATCH <loss> on success.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..",
+                                "src"))
+
+from repro.configs import MeshConfig, smoke_config
+from repro.dist.sharding import batch_specs, param_specs
+from repro.launch.mesh import make_mesh
+from repro.models import Runtime, build_model
+from repro.configs.base import ShapeConfig, StepKind
+
+ARCH = sys.argv[1] if len(sys.argv) > 1 else "qwen2-moe-a2.7b"
+
+mesh_cfg = MeshConfig(shape=(2, 4), axes=("data", "model"))
+cfg = smoke_config(ARCH).with_overrides(vocab_size=512)
+B, S = 4, 32
+shape = ShapeConfig("tiny", seq_len=S, global_batch=B, step=StepKind.TRAIN)
+
+# single-device reference
+model_ref = build_model(cfg, Runtime())
+params = model_ref.init(jax.random.PRNGKey(0))
+rng = jax.random.PRNGKey(7)
+batch = {"tokens": jax.random.randint(rng, (B, S), 0, cfg.vocab_size),
+         "labels": jax.random.randint(rng, (B, S), 0, cfg.vocab_size)}
+if cfg.frontend == "image_patches":
+    batch["patches"] = jax.random.normal(rng, (B, 8, cfg.d_model))
+if cfg.frontend == "audio_frames":
+    batch["frames"] = jax.random.normal(
+        rng, (B, cfg.encoder.max_source_len, cfg.d_model))
+loss_ref = jax.jit(lambda p, b: model_ref.loss(p, b)[0])(params, batch)
+
+# sharded run with the production rules
+mesh = make_mesh(mesh_cfg)
+model_sh = build_model(cfg, Runtime(tp_degree=mesh_cfg.model_degree))
+params_sh = model_sh.init(jax.random.PRNGKey(0))
+pspecs = param_specs(jax.eval_shape(lambda: params_sh), cfg, mesh_cfg)
+bspecs = batch_specs(jax.eval_shape(lambda: batch), mesh_cfg, shape)
+params_put = jax.tree.map(
+    lambda x, s: jax.device_put(x, NamedSharding(mesh, s)), params_sh,
+    pspecs)
+batch_put = jax.tree.map(
+    lambda x, s: jax.device_put(x, NamedSharding(mesh, s)), batch, bspecs)
+with mesh:
+    loss_sh = jax.jit(lambda p, b: model_sh.loss(p, b)[0])(
+        params_put, batch_put)
+
+ok = abs(float(loss_ref) - float(loss_sh)) < 2e-2 * max(
+    1.0, abs(float(loss_ref)))
+# NOTE: rwkv/starcoder pad heads under tp=4 -> params differ from the
+# unsharded model; for those archs we only check finiteness.
+import numpy as np
+
+padded = ARCH.startswith("rwkv") or cfg.num_heads % 4 != 0
+if padded:
+    ok = bool(np.isfinite(float(loss_sh)))
+print(("MATCH" if ok else "MISMATCH"),
+      float(loss_ref), float(loss_sh), flush=True)
+sys.exit(0 if ok else 1)

@@ -1,0 +1,73 @@
+"""Checkpoint manager: identity, atomicity, pruning, corruption, async."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt.checkpoint import CheckpointManager
+
+
+def make_state(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"a": jax.random.normal(k, (8, 16)),
+            "nested": {"b": jnp.arange(10, dtype=jnp.int32)},
+            "stack": (jnp.ones((3, 4)), jnp.zeros((2,)))}
+
+
+def test_save_restore_identity(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    state = make_state()
+    mgr.save(10, state, extra={"step": 10, "note": "x"})
+    like = jax.tree.map(jnp.zeros_like, state)
+    restored, extra = mgr.restore(like)
+    assert extra["step"] == 10
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(a, b),
+                 state, restored)
+
+
+def test_keep_last_prunes(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_last=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, make_state(s))
+    assert mgr.steps() == [3, 4]
+
+
+def test_corruption_detected(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(5, make_state())
+    npz = os.path.join(str(tmp_path), "step_00000005", "arrays.npz")
+    with open(npz, "r+b") as f:
+        f.seek(100)
+        f.write(b"\x00\x01\x02\x03")
+    with pytest.raises(IOError):
+        mgr.restore(make_state())
+
+
+def test_async_save(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    state = make_state()
+    mgr.save_async(7, state, extra={"step": 7})
+    mgr.wait()
+    restored, extra = mgr.restore(jax.tree.map(jnp.zeros_like, state))
+    assert extra["step"] == 7
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(a, b),
+                 state, restored)
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, make_state())
+    bad = {"a": jnp.zeros((4, 4)),
+           "nested": {"b": jnp.zeros((10,), jnp.int32)},
+           "stack": (jnp.ones((3, 4)), jnp.zeros((2,)))}
+    with pytest.raises(ValueError):
+        mgr.restore(bad)
+
+
+def test_no_tmp_left_behind(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(3, make_state())
+    assert not any(n.endswith(".tmp") for n in os.listdir(str(tmp_path)))

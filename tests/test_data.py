@@ -1,0 +1,71 @@
+"""Data pipeline: padding semantics, determinism, resumability."""
+import numpy as np
+
+from repro.data.batching import DataIterator, plan_epoch
+from repro.data.synthetic import IWSLT_LIKE, LIBRISPEECH_LIKE
+
+
+def test_max_pad_semantics():
+    sls = np.array([3, 9, 5, 7, 2, 8, 1, 4])
+    plan = plan_epoch(sls, 4, granularity=4, seed=0)
+    for p, members in zip(plan.padded_sls, plan.member_sls):
+        assert p >= members.max()
+        assert p % 4 == 0
+
+
+def test_sort_first_epoch_orders_sls():
+    sls = np.array([30, 1, 20, 5, 10, 2, 40, 3])
+    plan = plan_epoch(sls, 2, granularity=1, sort_first=True)
+    assert list(plan.padded_sls) == sorted(plan.padded_sls)
+
+
+def test_distributions_in_range():
+    rng = np.random.RandomState(0)
+    for dist in (IWSLT_LIKE, LIBRISPEECH_LIKE):
+        s = dist.sample(rng, 5000)
+        assert s.min() >= dist.min_len and s.max() <= dist.max_len
+        assert len(np.unique(s)) > 20
+
+
+def test_iterator_deterministic_and_resumable():
+    def make():
+        return DataIterator(IWSLT_LIKE, samples_per_epoch=256, batch_size=16,
+                            vocab_size=1000, granularity=4, seed=7)
+
+    it1 = iter(make())
+    ref = [next(it1) for _ in range(10)]
+
+    # fresh iterator replays identically
+    it2 = iter(make())
+    for tok_ref, lab_ref, sl_ref in ref:
+        tok, lab, sl = next(it2)
+        assert sl == sl_ref
+        np.testing.assert_array_equal(tok, tok_ref)
+        np.testing.assert_array_equal(lab, lab_ref)
+
+    # resume from the recorded state mid-epoch
+    d3 = make()
+    it3 = iter(d3)
+    for _ in range(6):
+        next(it3)
+    state = d3.state()
+    d4 = make()
+    d4.restore(state)
+    it4 = iter(d4)
+    for i in range(6, 10):
+        tok, lab, sl = next(it4)
+        assert sl == ref[i][2]
+        np.testing.assert_array_equal(tok, ref[i][0])
+
+
+def test_shards_consistent_sl_schedule():
+    kw = dict(samples_per_epoch=128, batch_size=16, vocab_size=500,
+              granularity=2, seed=3)
+    a = iter(DataIterator(IWSLT_LIKE, shard_id=0, num_shards=4, **kw))
+    b = iter(DataIterator(IWSLT_LIKE, shard_id=3, num_shards=4, **kw))
+    for _ in range(6):
+        ta, la, sa = next(a)
+        tb, lb, sb = next(b)
+        assert sa == sb                     # lockstep padded shapes
+        assert ta.shape == tb.shape == (4, sa)
+        assert not np.array_equal(ta, tb)   # different shards

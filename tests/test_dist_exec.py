@@ -1,0 +1,26 @@
+"""Multi-device execution correctness (8 fake host devices, subprocess so
+the device count doesn't leak into other tests)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+HELPER = os.path.join(os.path.dirname(__file__), "helpers", "dist_check.py")
+
+
+@pytest.mark.parametrize("arch", [
+    "qwen2-moe-a2.7b",        # shard_map EP/TP MoE path
+    "mistral-nemo-12b",       # GQA dense
+    "jamba-v0.1-52b",         # hybrid mamba + MoE
+    "rwkv6-3b",               # attention-free, padded heads
+])
+def test_sharded_matches_unsharded(arch):
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, HELPER, arch],
+                         capture_output=True, text=True, env=env,
+                         timeout=900)
+    assert res.returncode == 0, \
+        f"{arch}: {res.stdout[-1000:]}\n{res.stderr[-2000:]}"
+    assert "MATCH" in res.stdout

@@ -1,0 +1,74 @@
+"""Per-arch smoke: reduced config, one fwd/bwd step + one decode step on CPU,
+asserting shapes and finiteness (assignment requirement)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_model_config, list_archs, smoke_config, \
+    shapes_for
+from repro.models import Runtime, build_model
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_train_and_decode_smoke(arch):
+    cfg = smoke_config(arch)
+    model = build_model(cfg, Runtime())
+    rng = jax.random.PRNGKey(0)
+    params = model.init(rng)
+    B, S = 2, 64
+    batch = {"tokens": jax.random.randint(rng, (B, S), 0, cfg.vocab_size),
+             "labels": jax.random.randint(rng, (B, S), 0, cfg.vocab_size)}
+    if cfg.frontend == "image_patches":
+        batch["patches"] = jax.random.normal(rng, (B, 16, cfg.d_model))
+    if cfg.frontend == "audio_frames":
+        batch["frames"] = jax.random.normal(
+            rng, (B, cfg.encoder.max_source_len, cfg.d_model))
+
+    loss, grads = jax.jit(jax.value_and_grad(
+        lambda p, b: model.loss(p, b)[0]))(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), arch
+    gnorm = jax.tree.reduce(
+        lambda a, g: a + jnp.sum(jnp.square(g.astype(jnp.float32))),
+        grads, jnp.zeros(()))
+    assert bool(jnp.isfinite(gnorm)), arch
+
+    caches = model.init_cache(B, 32)
+    logits, new_caches = jax.jit(model.decode_step)(
+        params, caches, jnp.zeros((B, 1), jnp.int32),
+        jnp.array(3, jnp.int32))
+    assert logits.shape[0] == B
+    assert bool(jnp.all(jnp.isfinite(logits))), arch
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_assigned_dims_preserved(arch):
+    """The full config carries the exact published dims (spot invariants)."""
+    cfg = get_model_config(arch)
+    assert cfg.num_layers >= 24
+    assert cfg.vocab_size > 4000
+    shapes = shapes_for(cfg)
+    names = {s.name for s in shapes}
+    assert {"train_4k", "prefill_32k", "decode_32k"} <= names
+    if cfg.subquadratic:
+        assert "long_500k" in names
+    else:
+        assert "long_500k" not in names
+
+
+def test_specific_dims():
+    ds = get_model_config("deepseek-v3-671b")
+    assert (ds.num_layers, ds.d_model, ds.num_heads) == (61, 7168, 128)
+    assert ds.moe.num_experts == 256 and ds.moe.experts_per_token == 8
+    assert ds.mla.kv_lora_rank == 512
+    q72 = get_model_config("qwen2-72b")
+    assert (q72.num_layers, q72.d_ff, q72.vocab_size) == (80, 29568, 152064)
+    assert q72.qkv_bias
+    rw = get_model_config("rwkv6-3b")
+    assert rw.attention_free and rw.d_model == 2560
+    jb = get_model_config("jamba-v0.1-52b")
+    assert jb.interleave_period == 8
+    mixers = [m for m, _ in jb.pattern]
+    from repro.configs import BlockKind
+    assert mixers.count(BlockKind.ATTENTION) == 1
+    assert mixers.count(BlockKind.MAMBA) == 7

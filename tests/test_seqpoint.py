@@ -1,0 +1,120 @@
+"""SeqPoint algorithm unit tests (paper §V-C semantics)."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    EpochLog,
+    frequent,
+    kmeans_seqpoints,
+    median,
+    prior,
+    select_seqpoints,
+    worst,
+)
+
+
+def make_log(sls, runtime_fn, noise=0.0, seed=0):
+    rng = np.random.RandomState(seed)
+    log = EpochLog()
+    for sl in sls:
+        rt = runtime_fn(sl) * (1 + noise * rng.randn())
+        log.append(int(sl), max(rt, 1e-9))
+    return log
+
+
+def linear_rt(sl):
+    return 1e-3 * sl + 5e-3
+
+
+def test_all_unique_mode_is_exact():
+    sls = [8, 16, 24, 32] * 25
+    log = make_log(sls, linear_rt)
+    sp = select_seqpoints(log, n_threshold=10)
+    assert sp.k == 0 and sp.num_points == 4
+    assert sp.error < 1e-9
+    # weights = frequencies
+    assert sorted(p.weight for p in sp.points) == [25.0] * 4
+
+
+def test_weights_sum_to_iterations():
+    rng = np.random.RandomState(1)
+    sls = rng.randint(4, 400, size=500)
+    log = make_log(sls, linear_rt)
+    sp = select_seqpoints(log, error_threshold=0.05)
+    assert np.isclose(sp.weights.sum(), log.num_iterations)
+
+
+def test_representative_is_member_of_its_bin():
+    rng = np.random.RandomState(2)
+    sls = rng.randint(4, 400, size=800)
+    log = make_log(sls, lambda s: 1e-5 * s ** 1.5 + 1e-3)
+    sp = select_seqpoints(log, error_threshold=0.01)
+    table = log.by_seq_len()
+    assert set(sp.seq_lens) <= set(int(s) for s in table.seq_lens)
+
+
+def test_k_search_reaches_threshold_on_smooth_runtimes():
+    rng = np.random.RandomState(3)
+    sls = rng.randint(4, 1000, size=2000)
+    log = make_log(sls, linear_rt)
+    sp = select_seqpoints(log, error_threshold=0.02)
+    assert sp.error <= 0.02
+    assert sp.num_points <= 40
+
+
+def test_projection_to_other_config_scales():
+    """SeqPoints selected on config1 must project a 2x-slower config
+    exactly when the slowdown is SL-independent (paper architecture-
+    independence in the trivial limit)."""
+    rng = np.random.RandomState(4)
+    sls = rng.randint(4, 300, size=600)
+    log = make_log(sls, linear_rt)
+    sp = select_seqpoints(log, error_threshold=0.02)
+    pred2 = sp.project_total(lambda s: 2 * linear_rt(s))
+    actual2 = 2 * sum(linear_rt(s) for s in log.seq_lens())
+    assert abs(pred2 - actual2) / actual2 < 0.03
+
+
+def test_superlinear_runtime_needs_more_bins():
+    """Attention-style S^2 runtimes: binning still converges (DESIGN.md §7)."""
+    rng = np.random.RandomState(5)
+    sls = rng.randint(64, 4096, size=1500)
+    log = make_log(sls, lambda s: 1e-9 * s ** 2 + 1e-4)
+    sp = select_seqpoints(log, error_threshold=0.02)
+    assert sp.error <= 0.02
+
+
+def test_baselines_shapes():
+    rng = np.random.RandomState(6)
+    sls = rng.randint(4, 200, size=400)
+    log = make_log(sls, linear_rt, noise=0.0)
+    f, m, w, p = frequent(log), median(log), worst(log), prior(log)
+    assert f.num_points == m.num_points == w.num_points == 1
+    assert p.num_points == 50
+    # worst bounds the single-iteration strategies by construction
+    assert w.error >= f.error - 1e-12
+    assert w.error >= m.error - 1e-12
+    table = log.by_seq_len()
+    assert f.points[0].seq_len == int(
+        table.seq_lens[np.argmax(table.counts)])
+
+
+def test_kmeans_comparable_to_binning():
+    """Paper §VII-C: simple binning performs as well as k-means."""
+    rng = np.random.RandomState(7)
+    sls = rng.randint(4, 500, size=1000)
+    log = make_log(sls, linear_rt)
+    sp = select_seqpoints(log, error_threshold=0.02)
+    km = kmeans_seqpoints(log, k=sp.num_points)
+    assert km.error < 0.1
+
+
+def test_skewed_distribution_frequent_fails():
+    """The paper's motivating observation: `frequent` can be far off when
+    the mode is unrepresentative of total time."""
+    sls = [10] * 900 + [1000] * 100
+    log = make_log(sls, linear_rt)
+    f = frequent(log)
+    sp = select_seqpoints(log, error_threshold=0.02)
+    assert f.error > 0.3
+    assert sp.error <= 0.02

@@ -1,0 +1,80 @@
+"""Hypothesis property tests for the SeqPoint invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import EpochLog, select_seqpoints
+from repro.core.seqpoint import _bin_edges, _select_with_k
+from repro.data.batching import pad_to, plan_epoch
+
+
+@st.composite
+def epoch_logs(draw):
+    n_unique = draw(st.integers(2, 60))
+    sls = draw(st.lists(st.integers(1, 2048), min_size=n_unique,
+                        max_size=n_unique, unique=True))
+    counts = draw(st.lists(st.integers(1, 50), min_size=n_unique,
+                           max_size=n_unique))
+    a = draw(st.floats(1e-6, 1e-2))
+    b = draw(st.floats(1e-6, 1e-1))
+    log = EpochLog()
+    for sl, c in zip(sls, counts):
+        for _ in range(c):
+            log.append(sl, a * sl + b)
+    return log
+
+
+@settings(max_examples=40, deadline=None)
+@given(epoch_logs())
+def test_weights_partition_iterations(log):
+    sp = select_seqpoints(log, error_threshold=0.05)
+    assert np.isclose(sp.weights.sum(), log.num_iterations)
+
+
+@settings(max_examples=40, deadline=None)
+@given(epoch_logs())
+def test_points_are_observed_sls(log):
+    sp = select_seqpoints(log, error_threshold=0.05)
+    observed = set(int(s) for s in log.seq_lens())
+    assert set(sp.seq_lens) <= observed
+
+
+@settings(max_examples=40, deadline=None)
+@given(epoch_logs())
+def test_all_unique_exact_when_small(log):
+    table = log.by_seq_len()
+    sp = select_seqpoints(log, n_threshold=max(10, table.num_unique))
+    assert sp.error < 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(epoch_logs(), st.integers(2, 20))
+def test_bins_cover_all_sls(log, k):
+    table = log.by_seq_len()
+    points = _select_with_k(table, k)
+    # every iteration is represented by exactly one bin
+    assert np.isclose(sum(p.weight for p in points), table.num_iterations)
+    edges = _bin_edges(table, k)
+    assert edges[0] <= table.seq_lens[0]
+    assert edges[-1] > table.seq_lens[-1]
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(1, 500), min_size=32, max_size=400),
+       st.sampled_from([8, 16, 32]), st.sampled_from([1, 4, 8]))
+def test_batch_plan_invariants(sls, batch, gran):
+    plan = plan_epoch(np.array(sls), batch, granularity=gran)
+    # padded SL is a granularity multiple and >= every member
+    for p, members in zip(plan.padded_sls, plan.member_sls):
+        assert p % gran == 0
+        assert p >= members.max()
+        assert p - pad_to(int(members.max()), gran) == 0
+    assert 0.0 <= plan.padding_waste() < 1.0
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(1, 500), min_size=64, max_size=400))
+def test_bucketed_batching_never_increases_padding(sls):
+    sls = np.array(sls)
+    rand = plan_epoch(sls, 16, granularity=1, bucketed=False, seed=3)
+    buck = plan_epoch(sls, 16, granularity=1, bucketed=True, seed=3)
+    assert buck.padding_waste() <= rand.padding_waste() + 1e-9

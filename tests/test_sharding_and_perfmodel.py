@@ -1,0 +1,117 @@
+"""Sharding rules + perfmodel units (pure spec computation, no mesh)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import MULTI_POD, SINGLE_POD, get_model_config, \
+    get_shape, smoke_config
+from repro.dist.sharding import batch_specs, param_specs
+from repro.models import Runtime, build_model
+from repro.perfmodel.hlo import parse_collectives
+from repro.perfmodel.machine import PAPER_CONFIGS, TPU_V5E
+from repro.perfmodel.model_flops import model_flops, param_count
+
+
+def _specs_for(arch, mesh=SINGLE_POD, fsdp=False, **kw):
+    cfg = get_model_config(arch)
+    # production param dtype (bf16) — the fsdp size threshold keys on it
+    model = build_model(cfg, Runtime(tp_degree=mesh.model_degree,
+                                     param_dtype=jnp.bfloat16))
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    return cfg, shapes, param_specs(shapes, cfg, mesh, fsdp=fsdp, **kw)
+
+
+def test_dense_rules():
+    cfg, shapes, specs = _specs_for("mistral-nemo-12b")
+    assert specs["embed"] == P("model", None)
+    assert specs["lm_head"] == P(None, "model")
+    layer0 = specs["layers"][0]
+    assert layer0["mixer"]["wq"] == P(None, None, "model")
+    assert layer0["mixer"]["wo"] == P(None, "model", None)
+    # kv heads (8) don't divide tp (16) -> replicated kv projections
+    assert layer0["mixer"]["wk"] == P(None, None, None)
+    assert layer0["ffn"]["wi"] == P(None, None, "model")
+
+
+def test_moe_ep_vs_tp_rules():
+    _, _, ds = _specs_for("deepseek-v3-671b")           # 256 % 16 == 0 -> EP
+    assert ds["layers"][0]["ffn"]["e_wg"] == P(None, "model", None, None)
+    _, _, qw = _specs_for("qwen2-moe-a2.7b")            # 60 % 16 != 0 -> TP
+    assert qw["layers"][0]["ffn"]["e_wg"] == P(None, None, None, "model")
+    assert qw["layers"][0]["ffn"]["e_wo"] == P(None, None, "model", None)
+
+
+def test_fsdp_threshold_and_axes():
+    cfg, shapes, specs = _specs_for("qwen2-72b", fsdp=True)
+    # big FFN kernels get the data axis; the (model-sharded, small) embed
+    # table does not
+    wi = specs["layers"][0]["ffn"]["wi"]
+    assert "data" in jax.tree_util.tree_leaves(tuple(wi)) or \
+        any(ax == "data" for ax in wi if ax is not None)
+    assert specs["embed"] == P("model", None)
+    # cross-pod FSDP on the multi-pod mesh
+    _, _, sp = _specs_for("deepseek-v3-671b", mesh=MULTI_POD, fsdp=True,
+                          fsdp_over_pods=True)
+    flat = jax.tree_util.tree_leaves(
+        sp, is_leaf=lambda x: isinstance(x, P))
+    assert any(("pod", "data") in tuple(s) for s in flat)
+
+
+def test_batch_specs_shard_or_replicate():
+    cfg = get_model_config("qwen2-72b")
+    model = build_model(cfg, Runtime(tp_degree=16))
+    train = get_shape("train_4k")
+    bs = batch_specs(model.input_specs(train), SINGLE_POD, train)
+    assert bs["tokens"] == P("data", None)
+    long = get_shape("long_500k")
+    bs2 = batch_specs(
+        {"token": jax.ShapeDtypeStruct((1, 1), jnp.int32)}, SINGLE_POD, long)
+    assert bs2["token"] == P(None, None)        # B=1 -> replicated
+
+
+def test_param_count_sane():
+    # published totals (+-15%): qwen2-72b ~72B, mistral-nemo ~12B
+    assert abs(param_count(get_model_config("qwen2-72b")) - 72e9) < 12e9
+    assert abs(param_count(get_model_config("mistral-nemo-12b")) - 12e9) \
+        < 2.5e9
+    ds = get_model_config("deepseek-v3-671b")
+    assert abs(param_count(ds) - 671e9) < 80e9
+    # active params ~37B for deepseek-v3
+    assert abs(param_count(ds, active=True) - 37e9) < 8e9
+
+
+def test_model_flops_scaling():
+    cfg = get_model_config("starcoder2-3b")
+    t = model_flops(cfg, get_shape("train_4k"))
+    p = model_flops(cfg, get_shape("prefill_32k"))
+    # train = 6ND vs prefill = 2ND with equal token counts
+    assert np.isclose(t / p, 3.0, rtol=1e-6)
+
+
+def test_hlo_collective_parser():
+    txt = """
+  %ag = bf16[128,256]{1,0} all-gather(bf16[8,256]{1,0} %x), dims={0}
+  %ar.1 = f32[1024]{0} all-reduce-start(f32[1024]{0} %y), replica_groups={}
+  %rs = f32[64]{0} reduce-scatter(f32[1024]{0} %z), dimensions={0}
+  %cp = u8[32]{0} collective-permute(u8[32]{0} %w), channel_id=3
+"""
+    stats = parse_collectives(txt)
+    assert stats.count["all-gather"] == 1
+    assert stats.buffer_bytes["all-gather"] == 128 * 256 * 2
+    assert stats.count["all-reduce"] == 1
+    assert stats.buffer_bytes["all-reduce"] == 4096
+    assert stats.count["reduce-scatter"] == 1
+    assert stats.buffer_bytes["reduce-scatter"] == 4096   # operand counted
+    assert stats.count["collective-permute"] == 1
+    # wire factors: ar 2x, others 1x
+    assert stats.wire_bytes == (128 * 256 * 2 + 2 * 4096 + 4096 + 32)
+
+
+def test_machine_configs_ordering():
+    f, b, c = 1e15, 1e12, 1e10
+    t1 = PAPER_CONFIGS["config1"].step_time(f, b, c)
+    t2 = PAPER_CONFIGS["config2"].step_time(f, b, c)
+    t3 = PAPER_CONFIGS["config3"].step_time(f, b, c)
+    assert t2 > t1 and t3 > t2          # slower clocks/core counts
+    assert TPU_V5E.step_time_sum(f, b, c) >= TPU_V5E.step_time(f, b, c)
