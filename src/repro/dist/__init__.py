@@ -1,0 +1,50 @@
+"""repro.dist — named logical axes, sharding rules, grad compression.
+
+See ``src/repro/dist/README.md`` for the layout tables and the tier-1
+verification command.
+"""
+from repro.dist.axes import (
+    active_mesh,
+    constrain,
+    current_mesh_axes,
+    dp_axes,
+    set_dp_axes,
+    _resolve,
+)
+from repro.dist.compression import (
+    METHODS,
+    WIRE_BYTES_PER_ELEM,
+    compress_grads,
+    decompress_grads,
+    dp_grad_wire_bytes,
+    init_residual,
+    uses_error_feedback,
+)
+from repro.dist.sharding import (
+    FSDP_MIN_BYTES,
+    batch_specs,
+    cache_specs,
+    param_specs,
+    tp_activation_wire_bytes,
+)
+
+__all__ = [
+    "active_mesh",
+    "constrain",
+    "current_mesh_axes",
+    "dp_axes",
+    "set_dp_axes",
+    "_resolve",
+    "METHODS",
+    "WIRE_BYTES_PER_ELEM",
+    "compress_grads",
+    "decompress_grads",
+    "dp_grad_wire_bytes",
+    "init_residual",
+    "uses_error_feedback",
+    "FSDP_MIN_BYTES",
+    "batch_specs",
+    "cache_specs",
+    "param_specs",
+    "tp_activation_wire_bytes",
+]

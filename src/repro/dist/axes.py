@@ -1,0 +1,130 @@
+"""Named logical axes over the physical mesh (DESIGN.md §5).
+
+Model code never names physical mesh axes: it constrains activations along
+*logical* axes ("dp" for the batch dims, "tp" for tensor-parallel dims) and
+this module resolves them against whatever mesh is active.  Resolution is
+scoped: the launcher can retarget "dp" (e.g. ``parallelism="dp_only"`` maps
+the whole mesh onto the batch) with ``set_dp_axes``, either as a plain call
+or as a context manager that restores the previous mapping on exit.
+
+``constrain`` is a no-op when no mesh is active, so single-device smoke
+paths and jit tracing outside a mesh context run unchanged.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# Logical axis -> physical mesh axes it may map onto (filtered to the axes
+# actually present on the active mesh). "dp" can be rescoped via
+# ``set_dp_axes``; the rest are fixed vocabulary.
+_DEFAULT_LOGICAL = {
+    "dp": ("pod", "data"),       # data parallelism (batch dims)
+    "tp": ("model",),            # tensor parallelism (feature/head dims)
+    "ep": ("data", "model"),     # full expert parallelism (moe_full_ep)
+}
+
+_dp_override: Optional[Tuple[str, ...]] = None
+
+
+class _DpScope:
+    """Token returned by ``set_dp_axes``; optionally used as a context
+    manager to restore the previous mapping."""
+
+    def __init__(self, prev: Optional[Tuple[str, ...]]):
+        self._prev = prev
+
+    def __enter__(self) -> "_DpScope":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        global _dp_override
+        _dp_override = self._prev
+        return False
+
+
+def set_dp_axes(axes: Optional[Sequence[str]]) -> _DpScope:
+    """Retarget the "dp" logical axis to ``axes`` (``None`` restores the
+    default ("pod", "data") mapping). Returns a scope token usable as a
+    context manager."""
+    global _dp_override
+    prev = _dp_override
+    _dp_override = tuple(axes) if axes is not None else None
+    return _DpScope(prev)
+
+
+def dp_axes() -> Tuple[str, ...]:
+    return _dp_override if _dp_override is not None \
+        else _DEFAULT_LOGICAL["dp"]
+
+
+def active_mesh():
+    """The physical mesh of the enclosing ``with mesh:`` scope, or ``None``.
+
+    Works at trace time: ``jax.jit`` bodies traced inside a mesh context see
+    the mesh through the thread-local resource env.
+    """
+    from jax._src.mesh import thread_resources
+
+    m = thread_resources.env.physical_mesh
+    return None if m.empty else m
+
+
+def current_mesh_axes() -> Tuple[str, ...]:
+    """Axis names of the active mesh; ``()`` when no mesh is active."""
+    m = active_mesh()
+    return tuple(m.axis_names) if m is not None else ()
+
+
+def _resolve(logical: Optional[str],
+             mesh_axes: Optional[Sequence[str]] = None) -> Tuple[str, ...]:
+    """Logical name -> tuple of physical axes present on the (active) mesh.
+
+    Unknown names pass through as a physical axis name, so callers may mix
+    vocabularies ("dp" and "data" both work).
+    """
+    if logical is None:
+        return ()
+    if mesh_axes is None:
+        mesh_axes = current_mesh_axes()
+    if logical == "dp":
+        phys = dp_axes()
+    else:
+        phys = _DEFAULT_LOGICAL.get(logical, (logical,))
+    return tuple(a for a in phys if a in mesh_axes)
+
+
+def constrain(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """Apply ``with_sharding_constraint`` along logical axes when a mesh is
+    active; identity otherwise.
+
+    One logical name (or ``None``) per array dim. A dim is left unsharded
+    when its logical axis resolves to nothing on the mesh or its size does
+    not divide by the resolved axes' total extent — so the same model code
+    is valid on every mesh (including none).
+    """
+    m = active_mesh()
+    if m is None:
+        return x
+    if len(logical_axes) != x.ndim:
+        raise ValueError(
+            f"constrain: {len(logical_axes)} logical axes for rank-{x.ndim} "
+            f"array {x.shape}")
+    mesh_axes = tuple(m.axis_names)
+    entries = []
+    for dim, name in zip(x.shape, logical_axes):
+        phys = _resolve(name, mesh_axes)
+        extent = 1
+        for a in phys:
+            extent *= m.shape[a]
+        if not phys or extent <= 1 or dim % extent != 0:
+            entries.append(None)
+        else:
+            entries.append(phys[0] if len(phys) == 1 else phys)
+    if all(e is None for e in entries):
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(m, P(*entries)))

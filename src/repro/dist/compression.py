@@ -1,0 +1,147 @@
+"""Error-feedback gradient compression for the data-parallel all-reduce.
+
+The DP gradient all-reduce moves one full parameter-sized buffer per step;
+at production scale it is the dominant DCN/ICI term that does NOT scale
+with sequence length.  We compress the wire format and carry the
+quantization error forward as an *error-feedback residual* (Seide et al.
+1-bit SGD; Karimireddy et al. EF-SGD): the residual is added to the next
+step's gradients before compression, so the quantization noise is unbiased
+over time and the compressed loss curve tracks the uncompressed one.
+
+Methods (``OptimizerConfig.grad_compression``):
+  none      — identity.
+  bf16      — cast to bfloat16 on the wire (2x), residual = rounding error.
+  int8_ef   — per-tensor absmax int8 quantization (4x), error feedback.
+  topk_ef   — keep the top ``TOPK_FRACTION`` entries by magnitude exactly
+              (sparsification), error feedback carries the rest.
+
+The wire format is a dict of parallel pytrees (each mirroring the gradient
+tree), so it passes through jit/scan untouched.  ``decompress_grads`` needs
+the original gradient tree (or shapes) to rebuild dense leaves.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+TOPK_FRACTION = 0.05
+
+METHODS = ("none", "bf16", "int8_ef", "topk_ef")
+
+# wire bytes per gradient element (f32 baseline is 4)
+WIRE_BYTES_PER_ELEM = {
+    "none": 4.0,
+    "bf16": 2.0,
+    "int8_ef": 1.0,
+    "topk_ef": TOPK_FRACTION * 8.0,     # (int32 index + f32 value) per kept
+}
+
+
+def uses_error_feedback(method: str) -> bool:
+    return method.endswith("_ef")
+
+
+def _check(method: str) -> None:
+    if method not in METHODS:
+        raise ValueError(f"unknown grad compression {method!r}; "
+                         f"one of {METHODS}")
+
+
+def _topk_k(n: int) -> int:
+    return max(1, int(math.ceil(TOPK_FRACTION * n)))
+
+
+def compress_grads(grads: Params, method: str = "int8_ef"
+                   ) -> Tuple[Dict[str, Params], Optional[Params]]:
+    """Compress a gradient pytree to its wire format.
+
+    Returns ``(wire, residual)`` where ``residual = grads -
+    decompress(wire)`` is the error-feedback state to add to the *next*
+    step's gradients (``None`` for method "none").  All ops are jit-safe.
+    """
+    _check(method)
+    if method == "none":
+        return {"q": grads}, None
+
+    if method == "bf16":
+        q = jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+        err = jax.tree.map(
+            lambda g, w: g.astype(jnp.float32) - w.astype(jnp.float32),
+            grads, q)
+        return {"q": q}, err
+
+    if method == "int8_ef":
+        scale = jax.tree.map(
+            lambda g: jnp.maximum(
+                jnp.max(jnp.abs(g.astype(jnp.float32))) / 127.0, 1e-30),
+            grads)
+        q = jax.tree.map(
+            lambda g, s: jnp.clip(
+                jnp.round(g.astype(jnp.float32) / s), -127, 127
+            ).astype(jnp.int8), grads, scale)
+        err = jax.tree.map(
+            lambda g, qq, s: g.astype(jnp.float32)
+            - qq.astype(jnp.float32) * s, grads, q, scale)
+        return {"q": q, "scale": scale}, err
+
+    # topk_ef
+    idx = jax.tree.map(
+        lambda g: jax.lax.top_k(
+            jnp.abs(g.astype(jnp.float32).reshape(-1)),
+            _topk_k(g.size))[1].astype(jnp.int32), grads)
+    vals = jax.tree.map(
+        lambda g, i: g.astype(jnp.float32).reshape(-1)[i], grads, idx)
+    err = jax.tree.map(
+        lambda g, i, v: g.astype(jnp.float32).reshape(-1).at[i].set(0.0)
+        .reshape(g.shape), grads, idx, vals)
+    return {"idx": idx, "vals": vals}, err
+
+
+def decompress_grads(wire: Dict[str, Params], method: str,
+                     like: Params) -> Params:
+    """Rebuild a dense gradient pytree (dtype of ``like``) from the wire
+    format produced by ``compress_grads``."""
+    _check(method)
+    if method == "none":
+        return wire["q"]
+    if method == "bf16":
+        return jax.tree.map(lambda w, g: w.astype(g.dtype),
+                            wire["q"], like)
+    if method == "int8_ef":
+        return jax.tree.map(
+            lambda q, s, g: (q.astype(jnp.float32) * s).astype(g.dtype),
+            wire["q"], wire["scale"], like)
+    # topk_ef
+    return jax.tree.map(
+        lambda i, v, g: jnp.zeros(g.size, jnp.float32).at[i].set(v)
+        .reshape(g.shape).astype(g.dtype), wire["idx"], wire["vals"], like)
+
+
+def init_residual(params: Params, method: str) -> Optional[Params]:
+    """Zero error-feedback state (same tree as ``params``, f32), or ``None``
+    for methods without error feedback."""
+    _check(method)
+    if not uses_error_feedback(method):
+        return None
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+# ---------------------------------------------------------------------------
+# wire accounting (surfaced into EpochLog.stats by the trainer)
+
+
+def dp_grad_wire_bytes(params: Params, method: str, dp_degree: int) -> float:
+    """Per-step on-the-wire bytes of the DP gradient all-reduce under
+    ``method`` compression on a ``dp_degree``-way ring (2*(n-1)/n per
+    buffer byte). 0 when there is no data parallelism."""
+    _check(method)
+    if dp_degree <= 1:
+        return 0.0
+    n_elem = sum(int(l.size) for l in jax.tree.leaves(params))
+    buf = n_elem * WIRE_BYTES_PER_ELEM[method]
+    return float(2.0 * (dp_degree - 1) / dp_degree * buf)

@@ -1,0 +1,293 @@
+"""Logical -> physical sharding rules keyed on parameter path patterns.
+
+Parameters are plain dict pytrees; the leaf *path* carries the semantics
+(``repro.models.layers`` docstring): any leaf whose path ends in ``wq``/
+``wi`` is a column-parallel kernel, ``wo``/``out_proj`` row-parallel, expert
+kernels ``e_*`` shard over experts (EP) when the expert count divides the
+model degree and fall back to feature-dim TP otherwise, and so on.  The rule
+table below is the single place the megatron/FSDP layout lives; models and
+launchers only consume the resulting ``PartitionSpec`` trees.
+
+Layout summary (full table in ``repro/dist/README.md``):
+
+  leaf suffix              spec (trailing dims)         condition
+  ----------------------   --------------------------   -----------------------
+  embed                    ("model", None)              vocab % tp == 0
+  lm_head                  (None, "model")
+  wq / wi / s_wg / ...     (..., "model")               column-parallel
+  wk / wv / bk / bv        (..., "model")               num_kv_heads % tp == 0
+  w_uq / w_uk / w_uv       (..., "model")               num_heads % tp == 0
+  wo / out_proj / s_wo     (..., "model", None)         row-parallel
+  e_wg / e_wu / e_wo       ("model" on expert dim)      E % tp == 0 (EP)
+  e_wg / e_wu (TP fall.)   (..., "model")               feature dim
+  e_* (moe_full_ep)        (dp x model on expert dim)   E % (dp*tp) == 0
+  norms / biases / router  replicated
+
+FSDP (ZeRO-style) additionally shards big layer kernels over the data axis
+(and the pod axis with ``fsdp_over_pods``): any non-exempt leaf whose
+per-TP-shard footprint exceeds ``FSDP_MIN_BYTES`` gets the data axes on its
+largest still-unsharded divisible dim.  Embeddings, the LM head, and
+position tables are exempt — they are already vocab-sharded over the model
+axis and are touched once per step, so ZeRO gathers would cost more than
+they save.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import MeshConfig, ModelConfig, ShapeConfig
+from repro.models.layers import pad_heads, padded_vocab
+
+Params = Any
+
+# Per-TP-shard bytes above which an FSDP-eligible leaf is data-sharded.
+# Keyed on the *stored* dtype: at the production bf16 param dtype the layer
+# kernels of every >3B assigned arch cross it while norm scales never do.
+FSDP_MIN_BYTES = 2 ** 27  # 128 MiB
+
+# Leaves never FSDP-sharded (see module docstring).
+_FSDP_EXEMPT = ("embed", "lm_head", "enc_pos", "dec_pos")
+
+# Leaf names sharded on the last (output/feature) dim over the model axis.
+_COLUMN = ("wq", "wi", "bq", "bi", "s_wg", "s_wu", "in_proj", "conv_w",
+           "conv_b", "dt_proj", "w_a2", "w_r", "w_g", "w_k")
+# Leaf names sharded on dim -2 (input/feature) over the model axis.
+_ROW = ("wo", "bo_row", "s_wo", "out_proj", "w_o", "w_v")
+# KV projections: shard only when the kv-head count divides tp (otherwise a
+# head would straddle shards; we replicate instead of splitting heads).
+_KV = ("wk", "wv", "bk", "bv")
+# MLA latent->per-head kernels: head-structured output dim.
+_HEADED = ("w_uq", "w_uk", "w_uv")
+# Expert kernels: (E, d, f) / (E, f, d) with a leading stacking dim.
+_EXPERT_COL = ("e_wg", "e_wu")   # TP fallback shards f = last dim
+_EXPERT_ROW = ("e_wo",)          # TP fallback shards f = dim -2
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+        else:
+            out.append(str(k))
+    return tuple(out)
+
+
+def _axes_entry(axes: Sequence[str]):
+    return axes[0] if len(axes) == 1 else tuple(axes)
+
+
+def _dp_axes(mesh: MeshConfig, over_pods: bool) -> Tuple[str, ...]:
+    want = ("pod", "data") if over_pods else ("data",)
+    return tuple(a for a in mesh.axes if a in want)
+
+
+def _degree(mesh: MeshConfig, axes: Sequence[str]) -> int:
+    d = 1
+    for s, a in zip(mesh.shape, mesh.axes):
+        if a in axes:
+            d *= s
+    return d
+
+
+def _base_entries(names: Tuple[str, ...], shape: Tuple[int, ...],
+                  cfg: ModelConfig, tp: int, moe_full_ep: bool,
+                  mesh: MeshConfig) -> list:
+    """Model-axis (TP/EP) entries for one leaf; one entry per dim."""
+    nd = len(shape)
+    entries: list = [None] * nd
+    if nd == 0:
+        return entries
+    name = names[-1]
+    parent = names[-2] if len(names) > 1 else ""
+    # RWKV name collision: time-mix w_k/w_v (under "mixer") are column
+    # kernels; channel-mix w_k (column) / w_v (row) live under "ffn". The
+    # class lists above encode the ffn variant; flip for the mixer.
+    if parent == "mixer" and name in ("w_v",):
+        cls_row, cls_col = False, True
+    else:
+        cls_col = name in _COLUMN
+        cls_row = name in _ROW
+
+    def put(dim_idx: int, axes: Sequence[str]) -> None:
+        deg = _degree(mesh, axes)
+        if axes and deg > 1 and shape[dim_idx] % deg == 0:
+            entries[dim_idx] = _axes_entry(tuple(axes))
+
+    if tp <= 1 and not moe_full_ep:
+        return entries
+    has_model = "model" in mesh.axes
+
+    if name == "embed":
+        # (vocab_p, d): vocab rows over model; padded_vocab is a multiple of
+        # 128 so every power-of-two tp divides it.
+        if has_model and nd >= 2:
+            put(nd - 2, ("model",))
+        return entries
+    if name == "lm_head":
+        if has_model:
+            put(nd - 1, ("model",))
+        return entries
+    if name in ("enc_pos", "dec_pos", "router") or not has_model:
+        return entries
+
+    if name in _EXPERT_COL + _EXPERT_ROW and cfg.moe is not None:
+        e = cfg.moe.num_experts
+        ep_axes = tuple(a for a in mesh.axes if a in ("data", "model")) \
+            if moe_full_ep else ("model",)
+        ep_deg = _degree(mesh, ep_axes)
+        if e % ep_deg == 0 and nd >= 3:
+            put(nd - 3, ep_axes)               # expert-parallel
+        elif name in _EXPERT_COL:
+            put(nd - 1, ("model",))            # TP fallback: shard f
+        else:
+            put(nd - 2, ("model",))
+        return entries
+
+    if name in _KV:
+        if cfg.num_kv_heads and cfg.num_kv_heads % tp == 0:
+            put(nd - 1, ("model",))
+        return entries
+    if name in _HEADED:
+        if cfg.num_heads and cfg.num_heads % tp == 0:
+            put(nd - 1, ("model",))
+        return entries
+    if cls_col:
+        put(nd - 1, ("model",))
+        return entries
+    if cls_row and nd >= 2:
+        put(nd - 2, ("model",))
+        return entries
+    return entries
+
+
+def _apply_fsdp(entries: list, names: Tuple[str, ...],
+                shape: Tuple[int, ...], itemsize: int,
+                mesh: MeshConfig, over_pods: bool) -> list:
+    if names[-1] in _FSDP_EXEMPT:
+        return entries
+    dp = _dp_axes(mesh, over_pods)
+    dp_deg = _degree(mesh, dp)
+    if not dp or dp_deg <= 1:
+        return entries
+    # per-TP-shard footprint: total bytes / extent already sharded away
+    sharded = 1
+    for e, s in zip(entries, shape):
+        if e is not None:
+            sharded *= _degree(mesh, (e,) if isinstance(e, str) else e)
+    size = itemsize
+    for s in shape:
+        size *= s
+    if size // max(sharded, 1) < FSDP_MIN_BYTES:
+        return entries
+    # largest still-unsharded dim divisible by the dp degree
+    cands = sorted((s, i) for i, (e, s) in enumerate(zip(entries, shape))
+                   if e is None and s % dp_deg == 0)
+    if cands:
+        entries[cands[-1][1]] = _axes_entry(dp)
+    return entries
+
+
+def param_specs(params: Params, cfg: ModelConfig, mesh: MeshConfig,
+                fsdp: bool = False, fsdp_over_pods: bool = False,
+                moe_full_ep: bool = False,
+                parallelism: str = "tp") -> Params:
+    """PyTree of ``PartitionSpec`` matching ``params`` (shapes or arrays).
+
+    ``parallelism="dp_only"`` replicates every parameter (the whole mesh is
+    the batch); FSDP may still storage-shard big kernels over the data axes.
+    """
+    tp = mesh.model_degree if parallelism == "tp" else 1
+
+    def one(path, leaf):
+        names = _path_names(path)
+        shape = tuple(leaf.shape)
+        itemsize = jax.numpy.dtype(leaf.dtype).itemsize
+        entries = _base_entries(names, shape, cfg, tp, moe_full_ep, mesh)
+        if fsdp:
+            entries = _apply_fsdp(entries, names, shape, itemsize, mesh,
+                                  fsdp_over_pods)
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def batch_specs(batch: Params, mesh: MeshConfig, shape: ShapeConfig,
+                parallelism: str = "tp") -> Params:
+    """Batch inputs shard dim 0 over the data axes (the whole mesh under
+    ``dp_only``) when the global batch divides; otherwise replicate."""
+    if parallelism == "dp_only":
+        dp = mesh.axes
+    else:
+        dp = tuple(a for a in mesh.axes if a in ("pod", "data"))
+    deg = _degree(mesh, dp)
+
+    def one(leaf):
+        nd = len(leaf.shape)
+        if nd == 0:
+            return P()
+        if deg > 1 and leaf.shape[0] % deg == 0:
+            return P(_axes_entry(dp), *([None] * (nd - 1)))
+        return P(*([None] * nd))
+
+    return jax.tree.map(one, batch)
+
+
+def cache_specs(cache: Params, cfg: ModelConfig, mesh: MeshConfig,
+                shape: ShapeConfig) -> Params:
+    """Decode caches: batch (dim 1, after the layer-stacking dim) over the
+    data axes; attention KV head dims over the model axis when head-aligned.
+    Conservative for state caches (mamba/rwkv): batch sharding only."""
+    dp = tuple(a for a in mesh.axes if a in ("pod", "data"))
+    dp_deg = _degree(mesh, dp)
+    tp = mesh.model_degree
+    head_sizes = set()
+    if cfg.num_kv_heads:
+        head_sizes.add(cfg.num_kv_heads)
+        head_sizes.add(pad_heads(cfg.num_kv_heads, tp))
+    if cfg.num_heads:
+        head_sizes.add(pad_heads(cfg.num_heads, tp))
+
+    def one(leaf):
+        nd = len(leaf.shape)
+        entries: list = [None] * nd
+        if nd >= 2 and leaf.shape[1] == shape.global_batch \
+                and dp_deg > 1 and leaf.shape[1] % dp_deg == 0:
+            entries[1] = _axes_entry(dp)
+        if nd == 5 and tp > 1 and leaf.shape[-2] in head_sizes \
+                and leaf.shape[-2] % tp == 0:
+            entries[-2] = "model"
+        return P(*entries)
+
+    return jax.tree.map(one, cache)
+
+
+# ---------------------------------------------------------------------------
+# analytic collective accounting (per-SL communication projection)
+
+
+def tp_activation_wire_bytes(cfg: ModelConfig, global_batch: int,
+                             seq_len: int, tp: int, *,
+                             dtype_bytes: int = 2,
+                             training: bool = True) -> float:
+    """Per-step on-the-wire bytes of the TP activation all-reduces.
+
+    Megatron layout: 2 all-reduces of the (B, S, d) residual per block
+    (attention output + FFN output), each ring all-reduce moving
+    ``2*(tp-1)/tp`` bytes per buffer byte; backward doubles them. This is
+    the SL-proportional communication term SeqPoint projects (ISSUE 6 /
+    Daydream's "model the comms or mispredict the optimization").
+    """
+    if tp <= 1:
+        return 0.0
+    buf = global_batch * seq_len * cfg.d_model * dtype_bytes
+    per_block = 2 * buf * 2.0 * (tp - 1) / tp
+    total = per_block * cfg.num_layers
+    if training:
+        total *= 2.0
+    return float(total)

@@ -18,6 +18,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# pallas renamed TPUCompilerParams -> CompilerParams across jax versions
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
 
 def _lstm_kernel(xh_ref, w_ref, b_ref, c_ref, h_out_ref, c_out_ref):
     xh = xh_ref[...].astype(jnp.float32)            # (BB, D+H)
@@ -60,7 +64,7 @@ def lstm_cell_fwd(xh: jax.Array, w: jax.Array, b: jax.Array, c: jax.Array, *,
                    pl.BlockSpec((bb, bh), lambda i, j: (i, j))],
         out_shape=[jax.ShapeDtypeStruct((bsz, h), xh.dtype),
                    jax.ShapeDtypeStruct((bsz, h), xh.dtype)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(xh, w, b, c)

@@ -17,6 +17,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# pallas renamed TPUCompilerParams -> CompilerParams across jax versions
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
 
 def _mamba_kernel(x_ref, delta_ref, a_ref, b_ref, c_ref, d_ref, y_ref,
                   h_scr, *, chunk: int, n_state: int):
@@ -73,7 +77,7 @@ def mamba_scan_fwd(x: jax.Array, delta: jax.Array, a: jax.Array,
         out_specs=xspec,
         out_shape=jax.ShapeDtypeStruct((bsz, s, dim), x.dtype),
         scratch_shapes=[pltpu.VMEM((bd, n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, delta, a, b, c, d)

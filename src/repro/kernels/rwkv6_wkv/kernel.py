@@ -21,6 +21,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# pallas renamed TPUCompilerParams -> CompilerParams across jax versions
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
 
 def _wkv6_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, y_ref, s_scr, *,
                  chunk: int):
@@ -77,7 +81,7 @@ def wkv6_fwd(r: jax.Array, k: jax.Array, v: jax.Array, lw: jax.Array,
         out_specs=spec,
         out_shape=jax.ShapeDtypeStruct((bh, s, dh), r.dtype),
         scratch_shapes=[pltpu.VMEM((dh, dh), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(r, k, v, lw, u[:, None, :])

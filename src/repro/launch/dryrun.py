@@ -153,8 +153,12 @@ def lower_cell(cfg: ModelConfig, run: RunConfig, mesh,
         ospecs = param_specs(state_shape.params, cfg, run.mesh, run.fsdp,
                              run.fsdp_over_pods, run.moe_full_ep,
                              run.parallelism)
+        # error-feedback residual (grad compression) shards like the
+        # optimizer moments: gradient-shaped, per-replica persistent state
+        efspecs = ospecs if state_shape.ef is not None else None
         state_specs = TrainState(
-            params=pspecs, opt=OptState(step=P(), m=ospecs, v=ospecs))
+            params=pspecs, opt=OptState(step=P(), m=ospecs, v=ospecs),
+            ef=efspecs)
         state_sds = _with_sharding(state_shape, state_specs, mesh)
         batch_shape = model.input_specs(shape)
         bspecs = batch_specs(batch_shape, run.mesh, shape, run.parallelism)
@@ -196,6 +200,8 @@ def lower_cell(cfg: ModelConfig, run: RunConfig, mesh,
 
 def _costs(compiled) -> Dict[str, float]:
     ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):      # jax<=0.4.x: one entry per program
+        ca = ca[0] if ca else {}
     return {"flops": float(ca.get("flops", 0.0)),
             "bytes": float(ca.get("bytes accessed", 0.0))}
 

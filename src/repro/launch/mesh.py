@@ -17,9 +17,10 @@ def make_mesh(cfg: MeshConfig, devices: Optional[Sequence] = None) -> jax.shardi
             f"mesh {cfg.shape} needs {need} devices, have {len(devices)} "
             "(the dry-run launcher sets XLA_FLAGS="
             "--xla_force_host_platform_device_count=512 before importing jax)")
-    return jax.make_mesh(
-        cfg.shape, cfg.axes, devices=devices[:need],
-        axis_types=(jax.sharding.AxisType.Auto,) * len(cfg.axes))
+    import numpy as np
+
+    dev_grid = np.asarray(devices[:need]).reshape(cfg.shape)
+    return jax.sharding.Mesh(dev_grid, cfg.axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:

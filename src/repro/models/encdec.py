@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ShapeConfig, StepKind
+from repro.dist.axes import constrain
 from repro.models import attention as attn
 from repro.models.layers import (
     Params,
@@ -136,6 +137,7 @@ class EncDecLM:
         s = frames.shape[1]
         x = frames.astype(rt.compute_dtype) + \
             p["enc_pos"][:s].astype(rt.compute_dtype)
+        x = constrain(x, "dp", None, None)
         chunk = _auto_chunk(rt, s)
 
         def layer(x, lp):
@@ -210,7 +212,7 @@ class EncDecLM:
     def _embed_tokens(self, p, tokens, pos0: int = 0):
         x = p["embed"][tokens].astype(self.rt.compute_dtype)
         pos = p["dec_pos"][pos0:pos0 + tokens.shape[1]]
-        return x + pos.astype(x.dtype)
+        return constrain(x + pos.astype(x.dtype), "dp", None, None)
 
     def loss(self, p: Params, batch: Dict[str, jax.Array]):
         cfg = self.cfg
@@ -219,7 +221,8 @@ class EncDecLM:
         x = self._embed_tokens(p, batch["tokens"], 0)
         x, _ = self._decoder(p, x, cross_kv)
         w = p["embed"].T
-        logits = jnp.einsum("bsd,dv->bsv", x, w)
+        logits = constrain(jnp.einsum("bsd,dv->bsv", x, w),
+                           "dp", None, "tp")
         loss = softmax_xent(logits, batch["labels"], cfg.vocab_size)
         return loss, {"xent": loss}
 

@@ -45,15 +45,23 @@ class ServeEngine:
         return min(self.max_len, -(-sl // self.gran) * self.gran)
 
     def run_batch(self, requests: List[Request]) -> List[Request]:
-        """Prefill a batch of same-padded-SL requests, then decode."""
+        """Prefill a batch of same-padded-SL requests, then decode.
+
+        Pads the batch with dummy requests on a local copy only; the
+        caller's list is never mutated and only the real requests are
+        returned.
+        """
         assert len(requests) <= self.batch_size
-        while len(requests) < self.batch_size:            # pad batch
-            requests.append(Request(prompt=np.zeros(4, np.int32),
-                                    max_new_tokens=0))
-        sl = self._pad(max(len(r.prompt) for r in requests))
+        batch = list(requests)
+        while len(batch) < self.batch_size:               # pad batch
+            batch.append(Request(prompt=np.zeros(4, np.int32),
+                                 max_new_tokens=0))
+        sl = self._pad(max(len(r.prompt) for r in batch))
         toks = np.zeros((self.batch_size, sl), np.int32)
-        for i, r in enumerate(requests):
-            toks[i, -len(r.prompt):] = r.prompt[:sl]
+        for i, r in enumerate(batch):
+            prompt = r.prompt[-sl:]       # keep the most recent sl tokens
+            if len(prompt):
+                toks[i, -len(prompt):] = prompt
         t0 = time.perf_counter()
         logits, caches = self._prefill(self.params,
                                        {"tokens": jnp.asarray(toks)})
@@ -71,9 +79,9 @@ class ServeEngine:
             full, caches)
         token = jnp.argmax(logits[:, -1] if logits.ndim == 3 else logits,
                            axis=-1).astype(jnp.int32)[:, None]
-        n_steps = max((r.max_new_tokens for r in requests), default=0)
+        n_steps = max((r.max_new_tokens for r in batch), default=0)
         for step in range(n_steps):
-            for i, r in enumerate(requests):
+            for i, r in enumerate(batch):
                 if step < r.max_new_tokens:
                     r.output.append(int(token[i, 0]))
             logits, full = self._decode(self.params, full, token,

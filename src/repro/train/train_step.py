@@ -14,6 +14,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import RunConfig, StepKind
+from repro.dist.compression import (
+    compress_grads,
+    decompress_grads,
+    init_residual,
+)
 from repro.models.model_zoo import Model
 from repro.train.optimizer import (
     OptState,
@@ -28,13 +33,19 @@ Params = Any
 class TrainState(NamedTuple):
     params: Params
     opt: OptState
+    # error-feedback residual for compressed DP gradients; None when the
+    # compression method carries no state (tree structure is step-invariant,
+    # and None leaves vanish in path-flattened checkpoints)
+    ef: Any = None
 
 
 def init_train_state(model: Model, run: RunConfig, rng: jax.Array
                      ) -> TrainState:
     params = model.init(rng)
-    return TrainState(params=params, opt=init_opt_state(params,
-                                                        run.optimizer))
+    return TrainState(params=params,
+                      opt=init_opt_state(params, run.optimizer),
+                      ef=init_residual(params,
+                                       run.optimizer.grad_compression))
 
 
 def build_train_step(model: Model, run: RunConfig, total_steps: int = 10_000
@@ -75,11 +86,26 @@ def build_train_step(model: Model, run: RunConfig, total_steps: int = 10_000
             grads = jax.tree.map(lambda g: g / nmicro, grads)
             metrics = jax.tree.map(lambda m: m[-1], metrics)
 
+        # compressed DP all-reduce: quantize (grads + residual) to the wire
+        # format, apply the decompressed gradient, carry the new residual.
+        # The compress/decompress pair brackets the cross-replica reduction
+        # under SPMD; numerically it is replica-identical, so it also runs
+        # (and is tested) on a single device.
+        method = run.optimizer.grad_compression
+        ef_new = state.ef
+        if method != "none":
+            if state.ef is not None:
+                grads = jax.tree.map(jnp.add, grads, state.ef)
+            wire, err = compress_grads(grads, method)
+            grads = decompress_grads(wire, method, grads)
+            if state.ef is not None:
+                ef_new = err
+
         lr = lr_fn(state.opt.step)
         new_params, new_opt, opt_metrics = adamw_update(
             grads, state.opt, state.params, run.optimizer, lr)
         metrics = dict(metrics, loss=loss, **opt_metrics)
-        return TrainState(new_params, new_opt), metrics
+        return TrainState(new_params, new_opt, ef_new), metrics
 
     return train_step
 

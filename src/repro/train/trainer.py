@@ -20,6 +20,8 @@ import numpy as np
 from repro.ckpt.checkpoint import CheckpointManager
 from repro.configs.base import RunConfig
 from repro.core.profile import EpochLog
+from repro.dist.compression import dp_grad_wire_bytes
+from repro.dist.sharding import tp_activation_wire_bytes
 from repro.core.seqpoint import SeqPointSet, select_seqpoints
 from repro.data.batching import DataIterator
 from repro.models.model_zoo import Model
@@ -67,7 +69,16 @@ class Trainer:
         state, start = self.init_or_resume(rng)
         report = TrainerReport(resumed_from=start or None)
         it: Iterator = iter(self.data)
-        median_t: Optional[float] = None
+        # per-step DP gradient wire bytes are SL-independent (one param-sized
+        # all-reduce); TP activation bytes scale with SL — both go into
+        # EpochLog.stats so SeqPoint projects communication alongside compute
+        dp_deg = self.run.mesh.num_devices \
+            if self.run.parallelism == "dp_only" else self.run.mesh.data_degree
+        tp_deg = self.run.mesh.model_degree \
+            if self.run.parallelism == "tp" else 1
+        dp_bytes = dp_grad_wire_bytes(
+            state.params, self.run.optimizer.grad_compression, dp_deg)
+        sl_times: Dict[int, list] = {}
         for step in range(start, start + num_steps):
             tokens, labels, sl = next(it)
             batch = {"tokens": jax.numpy.asarray(tokens),
@@ -76,16 +87,22 @@ class Trainer:
             state, metrics = self.step_fn(state, batch)
             jax.block_until_ready(metrics["loss"])
             dt = time.perf_counter() - t0
-            # straggler mitigation: per-SL baseline; a step far beyond the
-            # running median of its SL marks a straggler (on real fleets
-            # this triggers hot-spare promotion; here we count + log)
-            same_sl = [t for s, t in zip(report.losses, report.step_times)]
-            if median_t is not None and dt > self.straggler_factor * median_t:
-                report.stragglers += 1
-            median_t = dt if median_t is None else 0.9 * median_t + 0.1 * dt
+            # straggler mitigation: per-SL baseline — a step far beyond the
+            # running median of its padded SL marks a straggler (on real
+            # fleets this triggers hot-spare promotion; here we count + log).
+            # SLs unseen so far fall back to the all-SL median.
+            baseline_pool = sl_times.get(sl) or report.step_times
+            if baseline_pool:
+                baseline = float(np.median(baseline_pool))
+                if dt > self.straggler_factor * baseline:
+                    report.stragglers += 1
+            sl_times.setdefault(sl, []).append(dt)
             report.losses.append(float(metrics["loss"]))
             report.step_times.append(dt)
-            self.epoch_log.append(sl, dt)
+            self.epoch_log.append(
+                sl, dt, dp_wire_bytes=dp_bytes,
+                tp_wire_bytes=tp_activation_wire_bytes(
+                    self.run.model, self.run.shape.global_batch, sl, tp_deg))
             if self.ckpt is not None and (step + 1) % self.ckpt_every == 0:
                 self.ckpt.save_async(step + 1, state,
                                      extra={"step": step + 1,

@@ -1,0 +1,223 @@
+"""repro.dist unit tests: logical-axis scoping, compression round-trips,
+error-feedback training parity, and collective-bytes accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import (
+    MeshConfig,
+    OptimizerConfig,
+    RunConfig,
+    ShapeConfig,
+    StepKind,
+    smoke_config,
+)
+from repro.data.batching import DataIterator
+from repro.data.synthetic import IWSLT_LIKE
+from repro.dist import axes as dist_axes
+from repro.dist.axes import _resolve, constrain, current_mesh_axes, \
+    set_dp_axes
+from repro.dist.compression import (
+    METHODS,
+    compress_grads,
+    decompress_grads,
+    dp_grad_wire_bytes,
+    init_residual,
+    uses_error_feedback,
+)
+from repro.dist.sharding import tp_activation_wire_bytes
+from repro.models import Runtime, build_model
+from repro.train.trainer import Trainer
+
+
+# ---------------------------------------------------------------------------
+# axes
+
+
+def test_resolve_defaults():
+    mesh_axes = ("pod", "data", "model")
+    assert _resolve("dp", mesh_axes) == ("pod", "data")
+    assert _resolve("tp", mesh_axes) == ("model",)
+    assert _resolve("ep", mesh_axes) == ("data", "model")
+    assert _resolve(None, mesh_axes) == ()
+    # unknown names pass through as physical axis names
+    assert _resolve("data", mesh_axes) == ("data",)
+    assert _resolve("nonexistent", mesh_axes) == ()
+    # filtered to the axes actually on the mesh
+    assert _resolve("dp", ("data", "model")) == ("data",)
+
+
+def test_set_dp_axes_scoping_restores():
+    assert dist_axes.dp_axes() == ("pod", "data")
+    with set_dp_axes(("pod", "data", "model")):
+        assert _resolve("dp", ("pod", "data", "model")) == \
+            ("pod", "data", "model")
+        with set_dp_axes(("data",)):
+            assert dist_axes.dp_axes() == ("data",)
+        assert dist_axes.dp_axes() == ("pod", "data", "model")
+    assert dist_axes.dp_axes() == ("pod", "data")
+    # plain-call form (no context manager): sticky until reset
+    set_dp_axes(("data",))
+    assert dist_axes.dp_axes() == ("data",)
+    set_dp_axes(None)
+    assert dist_axes.dp_axes() == ("pod", "data")
+
+
+def test_constrain_no_mesh_is_identity():
+    assert current_mesh_axes() == ()
+    x = jnp.ones((4, 8))
+    # no mesh: identity, and no rank validation is attempted
+    assert constrain(x, "dp", "tp") is x
+    assert constrain(x, "dp") is x
+
+
+def test_constrain_under_mesh_validates_and_guards():
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("data",))
+    x = jnp.ones((4, 8))
+    with mesh:
+        assert current_mesh_axes() == ("data",)
+        with pytest.raises(ValueError):
+            constrain(x, "dp")                 # rank mismatch
+        # extent-1 axes leave the array unconstrained (identity)
+        assert constrain(x, "dp", "tp") is x
+
+
+# ---------------------------------------------------------------------------
+# compression
+
+
+def _grad_tree(seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return {"a": jax.random.normal(ks[0], (32, 48)),
+            "b": {"c": jax.random.normal(ks[1], (128,)) * 10.0,
+                  "d": jax.random.normal(ks[2], (8, 4, 4)) * 0.01}}
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_roundtrip_plus_residual_reconstructs(method):
+    g = _grad_tree()
+    wire, err = compress_grads(g, method)
+    out = decompress_grads(wire, method, g)
+    assert jax.tree.structure(out) == jax.tree.structure(g)
+    if method == "none":
+        assert err is None
+        recon = out
+    else:
+        assert err is not None
+        recon = jax.tree.map(jnp.add, out, err)
+    for k in jax.tree.leaves(jax.tree.map(
+            lambda r, o: np.max(np.abs(np.asarray(r) - np.asarray(o))),
+            recon, g)):
+        assert k < 1e-5
+
+
+@pytest.mark.parametrize("method,bound", [("bf16", 0.005), ("int8_ef", 0.02)])
+def test_roundtrip_relative_error_bound(method, bound):
+    g = _grad_tree(1)
+    wire, _ = compress_grads(g, method)
+    out = decompress_grads(wire, method, g)
+    for o, gg in zip(jax.tree.leaves(out), jax.tree.leaves(g)):
+        rel = float(jnp.linalg.norm(o.astype(jnp.float32) - gg)
+                    / jnp.linalg.norm(gg))
+        assert rel < bound
+
+
+def test_topk_keeps_largest_exactly():
+    g = {"w": jnp.asarray(np.linspace(-1.0, 1.0, 100, dtype=np.float32))}
+    wire, err = compress_grads(g, "topk_ef")
+    out = decompress_grads(wire, "topk_ef", g)
+    kept = np.flatnonzero(np.asarray(out["w"]))
+    # 5% of 100 = 5 entries, the largest by magnitude, kept exactly
+    assert len(kept) == 5
+    np.testing.assert_allclose(np.asarray(out["w"])[kept],
+                               np.asarray(g["w"])[kept], rtol=0, atol=0)
+    np.testing.assert_allclose(np.asarray(out["w"] + err["w"]),
+                               np.asarray(g["w"]), rtol=1e-6, atol=1e-7)
+
+
+def test_init_residual_and_method_check():
+    p = {"w": jnp.ones((3, 3))}
+    assert init_residual(p, "none") is None
+    assert init_residual(p, "bf16") is None
+    ef = init_residual(p, "int8_ef")
+    assert float(jnp.abs(ef["w"]).max()) == 0.0
+    assert uses_error_feedback("topk_ef")
+    assert not uses_error_feedback("bf16")
+    with pytest.raises(ValueError):
+        compress_grads(p, "fp4")
+
+
+def test_compression_is_jittable():
+    g = _grad_tree(2)
+
+    @jax.jit
+    def f(g):
+        wire, err = compress_grads(g, "int8_ef")
+        return decompress_grads(wire, "int8_ef", g), err
+
+    out, err = f(g)
+    np.testing.assert_allclose(
+        np.asarray(out["a"] + err["a"]), np.asarray(g["a"]),
+        rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# wire accounting
+
+
+def test_dp_grad_wire_bytes_scaling():
+    p = {"w": jnp.zeros((1000,), jnp.float32)}
+    assert dp_grad_wire_bytes(p, "none", 1) == 0.0
+    full = dp_grad_wire_bytes(p, "none", 4)
+    assert full == pytest.approx(2 * 3 / 4 * 4000)     # ring factor x f32
+    assert dp_grad_wire_bytes(p, "int8_ef", 4) == pytest.approx(full / 4)
+    assert dp_grad_wire_bytes(p, "bf16", 4) == pytest.approx(full / 2)
+
+
+def test_tp_wire_bytes_proportional_to_sl():
+    cfg = smoke_config("starcoder2-3b")
+    b1 = tp_activation_wire_bytes(cfg, 8, 1024, 4)
+    b2 = tp_activation_wire_bytes(cfg, 8, 2048, 4)
+    assert b2 == pytest.approx(2 * b1)
+    assert tp_activation_wire_bytes(cfg, 8, 1024, 1) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# error-feedback training parity (ISSUE 6 acceptance: compressed loss curve
+# tracks the uncompressed one on the quickstart config)
+
+
+def _tiny_run(**kw):
+    cfg = smoke_config("starcoder2-3b").with_overrides(
+        num_layers=2, d_model=64, d_ff=128, vocab_size=256)
+    shape = ShapeConfig("tiny", seq_len=32, global_batch=8,
+                        step=StepKind.TRAIN)
+    mesh = MeshConfig(shape=(1,), axes=("data",))
+    run = RunConfig(model=cfg, shape=shape, mesh=mesh,
+                    param_dtype="float32", compute_dtype="float32", **kw)
+    return cfg, run
+
+
+def _losses(grad_compression, steps=25):
+    cfg, run = _tiny_run(optimizer=OptimizerConfig(
+        lr=1e-3, warmup_steps=2, grad_compression=grad_compression))
+    model = build_model(cfg, Runtime.from_run(run))
+    data = DataIterator(IWSLT_LIKE, samples_per_epoch=256, batch_size=8,
+                        vocab_size=cfg.vocab_size, granularity=8, seed=1)
+    tr = Trainer(model, run, data, total_steps=steps + 5)
+    return tr.train(steps), tr
+
+
+def test_ef_compressed_curve_tracks_uncompressed():
+    rep_u, _ = _losses("none")
+    rep_c, tr = _losses("int8_ef")
+    # both decrease
+    assert np.mean(rep_c.losses[-5:]) < np.mean(rep_c.losses[:5])
+    # compressed tracks uncompressed within a few percent at every step
+    u, c = np.asarray(rep_u.losses), np.asarray(rep_c.losses)
+    assert np.max(np.abs(u - c) / u) < 0.05
+    # collective-bytes stats surfaced per iteration into EpochLog
+    it = tr.epoch_log.iterations[0]
+    assert "dp_wire_bytes" in it.stats and "tp_wire_bytes" in it.stats
+    assert tr.epoch_log.total_stat("dp_wire_bytes") == 0.0   # 1-device mesh

@@ -109,6 +109,59 @@ def test_kmeans_comparable_to_binning():
     assert km.error < 0.1
 
 
+def test_all_unique_mode_at_exactly_threshold():
+    """num_unique == n_threshold must still take the exact all-unique path
+    (the binned path only starts strictly above the threshold)."""
+    sls = list(range(8, 88, 8)) * 3          # exactly 10 unique SLs
+    log = make_log(sls, linear_rt)
+    sp = select_seqpoints(log, n_threshold=10)
+    assert sp.k == 0
+    assert sp.meta["mode"] == "all-unique"
+    assert sp.num_points == 10
+    assert sp.error < 1e-9
+    # one more unique SL tips it into binned mode
+    log.append(1000, linear_rt(1000))
+    sp2 = select_seqpoints(log, n_threshold=10)
+    assert sp2.k > 0
+
+
+def test_empty_bins_are_skipped():
+    """SLs clustered at the extremes leave interior bins empty; those bins
+    produce no SeqPoint but the weights still cover every iteration."""
+    from repro.core.seqpoint import _select_with_k
+
+    sls = [8, 9, 10] * 20 + [990, 1000] * 30
+    log = make_log(sls, linear_rt)
+    table = log.by_seq_len()
+    points = _select_with_k(table, 8)
+    assert 0 < len(points) < 8               # interior bins were empty
+    assert sum(p.weight for p in points) == len(sls)
+
+
+def test_non_convergence_sets_meta_flag():
+    """Incoherent runtimes (no SL->runtime relation) cannot meet a ~0 error
+    threshold; the search must stop at k_max, return the best k found, and
+    flag non-convergence."""
+    rng = np.random.RandomState(8)
+    log = EpochLog()
+    for sl in rng.randint(4, 2000, size=300):
+        log.append(int(sl), float(rng.uniform(0.5, 1.5)))
+    sp = select_seqpoints(log, error_threshold=1e-12, k_max=8)
+    assert sp.meta.get("converged") is False
+    assert sp.k <= 8
+    assert sp.error > 1e-12
+
+
+def test_sltable_runtime_of_absent_sl_raises():
+    log = make_log([8, 16, 32], linear_rt)
+    table = log.by_seq_len()
+    assert table.runtime_of(16) > 0
+    with pytest.raises(KeyError):
+        table.runtime_of(24)                 # interior, absent
+    with pytest.raises(KeyError):
+        table.runtime_of(64)                 # beyond the last SL
+
+
 def test_skewed_distribution_frequent_fails():
     """The paper's motivating observation: `frequent` can be far off when
     the mode is unrepresentative of total time."""

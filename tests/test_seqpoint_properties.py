@@ -1,6 +1,9 @@
 """Hypothesis property tests for the SeqPoint invariants."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import EpochLog, select_seqpoints
 from repro.core.seqpoint import _bin_edges, _select_with_k

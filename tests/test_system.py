@@ -133,6 +133,26 @@ def test_grad_compression_int8_error_feedback():
                                np.asarray(g["w"]), rtol=1e-5, atol=1e-6)
 
 
+def test_serve_engine_does_not_mutate_requests_and_truncates():
+    from repro.serve.engine import Request, ServeEngine
+
+    cfg, run = _tiny_run()
+    model = build_model(cfg, Runtime.from_run(run))
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(model, params, batch_size=4, max_len=64,
+                      sl_granularity=16)
+    reqs = [Request(prompt=np.arange(1, 9, dtype=np.int32),
+                    max_new_tokens=3),
+            # prompt longer than max_len: must truncate, not crash
+            Request(prompt=np.arange(1, 101, dtype=np.int32) % cfg.vocab_size,
+                    max_new_tokens=2)]
+    out = eng.run_batch(reqs)
+    # only the real requests come back; the caller's list is untouched
+    assert out is reqs and len(reqs) == 2
+    assert len(out[0].output) == 3 and len(out[1].output) == 2
+    assert eng.log.num_iterations == 1
+
+
 def test_straggler_counter():
     cfg, run = _tiny_run()
     model = build_model(cfg, Runtime.from_run(run))
