@@ -1,8 +1,10 @@
 """Dry-run / roofline tables as benchmark rows (reads results/*.jsonl)."""
 from __future__ import annotations
 
+import argparse
 import json
 import os
+import sys
 
 from benchmarks.common import RESULTS_DIR, emit
 
@@ -61,4 +63,53 @@ def perf_summary(fast: bool) -> None:
              f"->{p['optimized']['fraction']:.3f}")
 
 
-ALL = [compile_summary, roofline_summary, perf_summary]
+_PROJ_FILES = (("16x16", "dryrun_compile_single.jsonl"),
+               ("2x16x16", "dryrun_compile_multi.jsonl"),
+               ("roofline", "dryrun_roofline.jsonl"))
+
+
+def projection_summary(fast: bool) -> float:
+    """One row per cell: analytic-vs-measured collective bytes relative
+    error (obs.projection). Returns the max error seen; the CLI entrypoint
+    below turns a bound violation into a non-zero exit."""
+    max_err = 0.0
+    for tag, fname in _PROJ_FILES:
+        for r in _read(fname):
+            proj = r.get("projection")
+            if r["status"] != "ok" or proj is None:
+                continue
+            err = float(proj["rel_error"])
+            max_err = max(max_err, err)
+            emit(f"projection_{tag}_{r['arch']}_{r['shape']}", 0.0,
+                 f"analytic_bytes={proj['analytic_wire_bytes']:.3e} "
+                 f"measured_bytes={proj['measured_wire_bytes']:.3e} "
+                 f"rel_error={err:.4f} "
+                 f"rel_error_reduce={proj['rel_error_reduce']:.4f}")
+    emit("projection_max_rel_error", 0.0, f"max_rel_error={max_err:.4f}")
+    return max_err
+
+
+ALL = [compile_summary, roofline_summary, perf_summary, projection_summary]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--max-rel-error", type=float,
+                    default=float(os.environ.get(
+                        "REPRO_PROJECTION_ERROR_BOUND", "inf")),
+                    help="fail (exit 1) if any cell's analytic-vs-measured "
+                         "collective-bytes relative error exceeds this")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for fn in (compile_summary, roofline_summary, perf_summary):
+        fn(False)
+    max_err = projection_summary(False)
+    if max_err > args.max_rel_error:
+        print(f"projection error {max_err:.4f} exceeds bound "
+              f"{args.max_rel_error:.4f}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

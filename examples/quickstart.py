@@ -5,8 +5,14 @@ the trainer logs (SL, runtime) per iteration, then selects SeqPoints and
 shows how few iterations reproduce the epoch's total time — the paper's core
 claim, end to end.
 
-    PYTHONPATH=src python examples/quickstart.py
+With observability on (``--obs-dir DIR`` or ``REPRO_OBS_DIR=DIR``), the run
+also writes a Perfetto-loadable Chrome trace, a metrics snapshot with
+SL-keyed step-time histograms, and a JSONL event log, and checks the
+SeqPoint projection live against the measured epoch (repro.obs).
+
+    PYTHONPATH=src python examples/quickstart.py [--obs-dir results/obs]
 """
+import argparse
 import os
 import sys
 
@@ -14,6 +20,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
+from repro import obs
 from repro.core import select_seqpoints, frequent, median, worst, prior
 from repro.core.characterize import WallclockProvider, epoch_log_from_plan
 from repro.core.reproduction import SETUPS
@@ -21,6 +28,13 @@ from repro.data.batching import plan_epoch
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--obs-dir", default=os.environ.get("REPRO_OBS_DIR"),
+                    help="enable tracing/metrics/events, export here")
+    args = ap.parse_args()
+    if args.obs_dir:
+        obs.enable(out_dir=args.obs_dir)
+
     setup = SETUPS["gnmt"]()
     rng = np.random.RandomState(0)
     sls = setup["dist"].sample(rng, 1280)
@@ -28,16 +42,22 @@ def main() -> None:
                       granularity=setup["granularity"])
     print(f"epoch: {plan.num_batches} iterations, "
           f"{len(set(map(int, plan.padded_sls)))} unique padded SLs")
+    obs.event("run_start", example="quickstart", network="gnmt",
+              iterations=plan.num_batches)
 
     print("profiling every unique SL (the expensive ground-truth pass)...")
     provider = WallclockProvider(setup["step_builder"], repeats=3)
-    log = epoch_log_from_plan(plan, provider)
+    with obs.span("quickstart/profile_epoch"):
+        log = epoch_log_from_plan(plan, provider)
     print(f"measured epoch time: {log.total_runtime:.2f}s")
 
-    sp = select_seqpoints(log, error_threshold=0.02)
+    with obs.span("quickstart/select_seqpoints"):
+        sp = select_seqpoints(log, error_threshold=0.02)
     print(f"\nSeqPoints: {sp.num_points} iterations (k={sp.k}) "
           f"-> projected {sp.predicted:.2f}s, error {100*sp.error:.2f}%")
     print(f"  SLs: {sp.seq_lens}")
+    obs.event("seqpoints_selected", num_points=sp.num_points, k=sp.k,
+              error=sp.error, converged=sp.meta.get("converged"))
     for name, fn in (("frequent", frequent), ("median", median),
                      ("worst", worst), ("prior", prior)):
         b = fn(log)
@@ -46,6 +66,25 @@ def main() -> None:
     red = plan.num_batches / sp.num_points
     print(f"\nprofiling reduction: {red:.0f}x fewer iterations "
           f"(paper reports 214x/345x at full dataset scale)")
+
+    # live projection-error check: price every logged iteration by its
+    # nearest SeqPoint and compare against the measured epoch total
+    monitor = obs.ProjectionMonitor(sp)
+    monitor.observe_log(log)
+    rep = monitor.report()
+    print(f"projection monitor: projected {rep.projected_total:.2f}s vs "
+          f"measured {rep.measured_total:.2f}s "
+          f"(rel error {100*rep.rel_error:.2f}%, "
+          f"{len(rep.per_sl)} SLs tracked)")
+    obs.event("projection_report", projected=rep.projected_total,
+              measured=rep.measured_total, rel_error=rep.rel_error)
+
+    obs.event("run_end", example="quickstart")
+    if args.obs_dir:
+        paths = obs.export_all()
+        print("\nobservability artifacts:")
+        for kind, path in sorted(paths.items()):
+            print(f"  {kind:13s} {path}")
 
 
 if __name__ == "__main__":

@@ -23,6 +23,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.core.profile import EpochLog, SLTable
 from repro.core.seqpoint import SeqPointSet, select_seqpoints
 from repro.data.batching import BatchPlan
@@ -49,22 +50,31 @@ class WallclockProvider:
 
     def profile(self, sl: int) -> ProfileResult:
         if sl in self.cache:
+            obs.metrics.counter("profile_cache_hits_total",
+                                provider="wallclock").inc()
             return self.cache[sl]
         import jax
-        t0 = time.perf_counter()
-        fn, args = self.step_builder(sl)
-        jfn = jax.jit(fn)
-        out = jfn(*args)
-        jax.block_until_ready(out)                    # compile + warmup
-        compile_cost = time.perf_counter() - t0
-        times = []
-        for _ in range(self.repeats):
+        with obs.span("profile/wallclock", sl=sl):
             t0 = time.perf_counter()
-            jax.block_until_ready(jfn(*args))
-            times.append(time.perf_counter() - t0)
+            with obs.span("profile/compile_warmup", sl=sl):
+                fn, args = self.step_builder(sl)
+                jfn = jax.jit(fn)
+                out = jfn(*args)
+                jax.block_until_ready(out)            # compile + warmup
+            compile_cost = time.perf_counter() - t0
+            times = []
+            for _ in range(self.repeats):
+                t0 = time.perf_counter()
+                with obs.span("profile/measure", sl=sl):
+                    jax.block_until_ready(jfn(*args))
+                times.append(time.perf_counter() - t0)
         res = ProfileResult(runtime=float(np.median(times)),
                             stats={"runtime_std": float(np.std(times))},
                             profile_cost=compile_cost + sum(times))
+        mreg = obs.metrics
+        mreg.histogram("profile_step_time_s", sl=sl).observe(res.runtime)
+        mreg.histogram("profile_cost_s", provider="wallclock",
+                       sl=sl).observe(res.profile_cost)
         self.cache[sl] = res
         return res
 
@@ -83,8 +93,9 @@ class CompiledCostProvider:
     def costs(self, sl: int) -> Tuple[float, float, float]:
         if sl not in self.cost_cache:
             t0 = time.perf_counter()
-            compiled = self.lower_builder(sl).compile()
-            ca = compiled.cost_analysis()
+            with obs.span("profile/compiled_cost", sl=sl):
+                compiled = self.lower_builder(sl).compile()
+                ca = compiled.cost_analysis()
             flops = float(ca.get("flops", 0.0))
             bts = float(ca.get("bytes accessed", 0.0))
             try:
@@ -94,6 +105,11 @@ class CompiledCostProvider:
                 coll = 0.0
             self.cost_cache[sl] = (flops, bts, coll)
             self.profile_costs[sl] = time.perf_counter() - t0
+            obs.metrics.histogram("profile_cost_s", provider="compiled",
+                                  sl=sl).observe(self.profile_costs[sl])
+        else:
+            obs.metrics.counter("profile_cache_hits_total",
+                                provider="compiled").inc()
         return self.cost_cache[sl]
 
     def profile(self, sl: int,

@@ -107,7 +107,7 @@ def select_seqpoints(log: EpochLog | SLTable, *,
         pred = _eq1(points)
         return SeqPointSet(points, k=0, predicted=pred, actual=actual,
                            error=abs(pred - actual) / max(actual, 1e-12),
-                           meta={"mode": "all-unique"})
+                           meta={"mode": "all-unique", "converged": True})
 
     best: Optional[SeqPointSet] = None
     k = k_init
@@ -116,7 +116,8 @@ def select_seqpoints(log: EpochLog | SLTable, *,
         pred = _eq1(points)
         err = abs(pred - actual) / max(actual, 1e-12)
         cand = SeqPointSet(points, k=k, predicted=pred, actual=actual,
-                           error=err, meta={"mode": "binned"})
+                           error=err,
+                           meta={"mode": "binned", "converged": True})
         if best is None or err < best.error:
             best = cand
         if err <= error_threshold:

@@ -44,6 +44,9 @@ from repro.configs import (
 )
 from repro.dist.sharding import batch_specs, cache_specs, param_specs
 from repro.launch.mesh import make_mesh
+from repro.obs import span
+from repro.obs.projection import cell_collective_projection, \
+    collective_projection_report
 from repro.models.model_zoo import build_model
 from repro.models.transformer import Runtime
 from repro.perfmodel.hlo import CollectiveStats, parse_collectives
@@ -217,8 +220,10 @@ def run_cell(arch: str, shape_name: str, mesh_cfg: MeshConfig, mesh,
     try:
         if mode == "compile":
             run = default_run(cfg, shape, mesh_cfg, **overrides)
-            lowered = lower_cell(cfg, run, mesh, roofline=False)
-            compiled = lowered.compile()
+            with span("dryrun/lower", arch=arch, shape=shape_name):
+                lowered = lower_cell(cfg, run, mesh, roofline=False)
+            with span("dryrun/compile", arch=arch, shape=shape_name):
+                compiled = lowered.compile()
             ma = compiled.memory_analysis()
             rec["memory"] = {
                 "argument_bytes": int(ma.argument_size_in_bytes),
@@ -236,8 +241,15 @@ def run_cell(arch: str, shape_name: str, mesh_cfg: MeshConfig, mesh,
             rec["memory"].update(structural_memory(
                 run, int(ma.argument_size_in_bytes)))
             rec.update(_costs(compiled))
-            rec["collectives"] = parse_collectives(
-                compiled.as_text()).to_dict()
+            coll_stats = parse_collectives(compiled.as_text())
+            rec["collectives"] = coll_stats.to_dict()
+            # analytic-vs-measured collective bytes (obs.projection): the
+            # projection-error report the ROADMAP asks for, per cell. The
+            # rolled scan appears once in the HLO text, i.e. one interleave
+            # period of layer collectives.
+            rec["projection"] = cell_collective_projection(
+                cfg, shape, run, coll_stats,
+                layers_counted=cfg.interleave_period)
         elif mode == "roofline":
             n = _n_periods(cfg)
             full_run = default_run(cfg, shape, mesh_cfg, **overrides)
@@ -297,6 +309,8 @@ def run_cell(arch: str, shape_name: str, mesh_cfg: MeshConfig, mesh,
             rec["bytes"] = bytes_model
             rec["collectives"] = coll.to_dict()
             rec["wire_bytes"] = coll.wire_bytes
+            rec["projection"] = cell_collective_projection(
+                cfg, shape, full_run, coll)
             mf = model_flops(cfg, shape)
             chips = mesh_cfg.num_devices
             t_comp = flops / TPU_V5E.peak_flops
@@ -340,6 +354,7 @@ def main() -> int:
     os.makedirs(os.path.dirname(out_path), exist_ok=True)
 
     n_fail = 0
+    all_recs = []
     with open(out_path, "w") as f:
         for mesh_cfg in meshes:
             mesh = make_mesh(mesh_cfg)
@@ -354,8 +369,25 @@ def main() -> int:
                     print(json.dumps(line), flush=True)
                     f.write(json.dumps(rec) + "\n")
                     f.flush()
+                    all_recs.append(rec)
                     if rec["status"] != "ok":
                         n_fail += 1
+
+    # per-cell projection-error report: analytic wire bytes vs measured HLO
+    # collective bytes (obs.projection closes the ROADMAP open item here)
+    report = collective_projection_report(all_recs)
+    proj_path = out_path[:-len(".jsonl")] + "_projection.json" \
+        if out_path.endswith(".jsonl") else out_path + ".projection.json"
+    with open(proj_path, "w") as f:
+        json.dump(report, f, indent=1)
+    print("\nprojection error (analytic vs measured collective bytes):",
+          file=sys.stderr)
+    for c in report["cells"]:
+        print(f"  {c['cell']:48s} analytic={c['analytic_wire_bytes']:.3e} "
+              f"measured={c['measured_wire_bytes']:.3e} "
+              f"rel_error={c['rel_error']:.3f}", file=sys.stderr)
+    print(f"  max_rel_error={report['max_rel_error']:.3f} "
+          f"({report['num_cells']} cells) -> {proj_path}", file=sys.stderr)
     print(f"\n{'FAILURES: ' + str(n_fail) if n_fail else 'ALL CELLS OK'}",
           file=sys.stderr)
     return 1 if n_fail else 0

@@ -1,0 +1,223 @@
+"""SeqPoint projection-error monitoring: check the projections against the
+ground truth they claim to predict.
+
+Daydream (2020)'s lesson is that an optimization-efficacy estimate is only
+trustworthy once validated against instrumented execution. Two validators
+live here:
+
+* ``ProjectionMonitor`` — given a ``SeqPointSet`` selected earlier, watch a
+  live ``EpochLog`` (or a stream of ``observe(sl, runtime)`` calls) and
+  report the running projected-vs-measured epoch runtime plus per-SL
+  residuals. Each observed iteration is predicted by its nearest SeqPoint's
+  profiled runtime — exactly the substitution Eq. 1 makes, now checked
+  online instead of assumed.
+
+* ``cell_collective_projection`` / ``collective_projection_report`` — the
+  analytic communication model (``tp_activation_wire_bytes`` +
+  ``dp_grad_wire_bytes``) against *measured* HLO collective bytes from
+  ``perfmodel.hlo.parse_collectives``, per dry-run cell (ROADMAP open
+  item). The residual between the two is the model's blind spot (e.g. ZeRO
+  param gathers), reported per collective kind so it is attributable.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterable, List, Optional
+
+import numpy as np
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig, StepKind
+from repro.core.profile import EpochLog
+from repro.core.seqpoint import SeqPointSet
+from repro.dist.compression import WIRE_BYTES_PER_ELEM
+from repro.dist.sharding import tp_activation_wire_bytes
+from repro.perfmodel.hlo import CollectiveStats
+from repro.perfmodel.model_flops import param_count
+
+
+# --------------------------------------------------------------------------
+# live epoch-runtime projection
+
+
+@dataclass(frozen=True)
+class SLResidual:
+    seq_len: int
+    iterations: int
+    measured_mean: float       # mean measured per-iteration runtime
+    predicted: float           # nearest-SeqPoint profiled runtime
+    residual: float            # measured_mean - predicted
+    rel_error: float
+
+
+@dataclass
+class ProjectionReport:
+    iterations: int
+    measured_total: float      # sum of observed runtimes
+    projected_total: float     # same iterations priced by their SeqPoints
+    rel_error: float           # |projected - measured| / measured
+    eq1_predicted: float       # full-epoch Eq. 1 number from selection time
+    per_sl: List[SLResidual] = field(default_factory=list)
+
+    def worst_sl(self) -> Optional[SLResidual]:
+        if not self.per_sl:
+            return None
+        return max(self.per_sl, key=lambda r: abs(r.rel_error))
+
+
+class ProjectionMonitor:
+    """Running projected-vs-measured check for one ``SeqPointSet``."""
+
+    def __init__(self, seqpoints: SeqPointSet):
+        if not seqpoints.points:
+            raise ValueError("SeqPointSet has no points")
+        self.seqpoints = seqpoints
+        pts = sorted(seqpoints.points, key=lambda p: p.seq_len)
+        self._sp_sls = np.array([p.seq_len for p in pts], dtype=np.int64)
+        self._sp_rts = np.array([p.runtime for p in pts])
+        # per observed SL: [count, measured_sum]
+        self._by_sl: Dict[int, List[float]] = {}
+        self.measured_total = 0.0
+        self.projected_total = 0.0
+        self.iterations = 0
+
+    def predict(self, sl: int) -> float:
+        """Per-iteration runtime the projection assigns to ``sl``: the
+        profiled runtime of the nearest SeqPoint (its bin representative)."""
+        idx = int(np.argmin(np.abs(self._sp_sls - int(sl))))
+        return float(self._sp_rts[idx])
+
+    def observe(self, sl: int, runtime: float) -> None:
+        sl = int(sl)
+        acc = self._by_sl.setdefault(sl, [0.0, 0.0])
+        acc[0] += 1
+        acc[1] += runtime
+        self.measured_total += runtime
+        self.projected_total += self.predict(sl)
+        self.iterations += 1
+
+    def observe_log(self, log: EpochLog) -> None:
+        for it in log.iterations:
+            self.observe(it.seq_len, it.runtime)
+
+    def report(self) -> ProjectionReport:
+        per_sl = []
+        for sl in sorted(self._by_sl):
+            n, total = self._by_sl[sl]
+            mean = total / n
+            pred = self.predict(sl)
+            per_sl.append(SLResidual(
+                seq_len=sl, iterations=int(n), measured_mean=mean,
+                predicted=pred, residual=mean - pred,
+                rel_error=(mean - pred) / max(mean, 1e-12)))
+        return ProjectionReport(
+            iterations=self.iterations,
+            measured_total=self.measured_total,
+            projected_total=self.projected_total,
+            rel_error=abs(self.projected_total - self.measured_total)
+            / max(self.measured_total, 1e-12),
+            eq1_predicted=self.seqpoints.predicted,
+            per_sl=per_sl)
+
+
+# --------------------------------------------------------------------------
+# analytic-vs-measured collective bytes (per dry-run cell)
+
+
+def analytic_wire_bytes(cfg: ModelConfig, shape: ShapeConfig, *,
+                        parallelism: str, dp_degree: int, tp_degree: int,
+                        grad_compression: str = "none") -> Dict[str, float]:
+    """The two analytic per-step communication terms SeqPoint projects."""
+    training = shape.step == StepKind.TRAIN
+    dp = 0.0
+    if training and dp_degree > 1:
+        buf = param_count(cfg, active=False) \
+            * WIRE_BYTES_PER_ELEM[grad_compression]
+        dp = 2.0 * (dp_degree - 1) / dp_degree * buf
+    # decode moves one token through the stack, not shape.seq_len
+    sl = 1 if shape.step == StepKind.DECODE else shape.seq_len
+    tp = tp_activation_wire_bytes(cfg, shape.global_batch, sl, tp_degree,
+                                  training=training)
+    return {"dp_grad": dp, "tp_activation": tp, "total": dp + tp}
+
+
+# kinds the analytic model claims to cover: gradient all-reduce (or its
+# ZeRO reduce-scatter + all-gather decomposition) + TP activation all-reduce
+_REDUCE_KINDS = ("all-reduce", "reduce-scatter", "all-gather")
+
+
+def cell_collective_projection(cfg: ModelConfig, shape: ShapeConfig,
+                               run: RunConfig,
+                               measured: CollectiveStats, *,
+                               layers_counted: Optional[int] = None
+                               ) -> Dict[str, Any]:
+    """Analytic-vs-measured wire bytes for one dry-run cell.
+
+    ``parse_collectives`` sums the per-device SPMD module, so the analytic
+    terms are normalized to per-device: the TP activation number divides by
+    the data degree (the residual is batch-sharded over ``dp``); the DP
+    gradient number already is per-device ring traffic. ``layers_counted``
+    handles compile-mode rolled scans, where the HLO text contains one scan
+    body (one interleave period) rather than the full depth — pass
+    ``cfg.interleave_period`` there, leave None for extrapolated
+    (roofline) stats that already cover every layer.
+    """
+    dp_degree = (run.mesh.num_devices if run.parallelism == "dp_only"
+                 else run.mesh.data_degree)
+    tp_degree = run.mesh.model_degree if run.parallelism == "tp" else 1
+    analytic = analytic_wire_bytes(
+        cfg, shape, parallelism=run.parallelism, dp_degree=dp_degree,
+        tp_degree=tp_degree,
+        grad_compression=run.optimizer.grad_compression)
+    depth_frac = 1.0 if layers_counted is None \
+        else layers_counted / max(cfg.num_layers, 1)
+    a_tp = analytic["tp_activation"] / max(dp_degree, 1) * depth_frac
+    a_dp = analytic["dp_grad"]
+    a_total = a_dp + a_tp
+    measured_total = float(measured.wire_bytes)
+    measured_reduce = float(measured.wire_bytes_of(_REDUCE_KINDS))
+    return {
+        "analytic_dp_bytes": a_dp,
+        "analytic_tp_bytes": a_tp,
+        "analytic_wire_bytes": a_total,
+        "layers_counted": layers_counted or cfg.num_layers,
+        "measured_wire_bytes": measured_total,
+        "measured_reduce_wire_bytes": measured_reduce,
+        "measured_by_kind": measured.to_dict(),
+        "rel_error": abs(a_total - measured_total)
+        / max(measured_total, 1.0)
+        if (a_total or measured_total) else 0.0,
+        "rel_error_reduce": abs(a_total - measured_reduce)
+        / max(measured_reduce, 1.0)
+        if (a_total or measured_reduce) else 0.0,
+        "dp_degree": dp_degree,
+        "tp_degree": tp_degree,
+    }
+
+
+def collective_projection_report(records: Iterable[Dict[str, Any]], *,
+                                 error_bound: Optional[float] = None
+                                 ) -> Dict[str, Any]:
+    """Aggregate per-cell ``projection`` entries from dry-run records.
+
+    Returns ``{"cells": [...], "max_rel_error": x, "within_bound": bool}``;
+    ``within_bound`` is True when no cell exceeds ``error_bound`` (always
+    True when no bound is given).
+    """
+    cells: List[Dict[str, Any]] = []
+    for rec in records:
+        proj = rec.get("projection")
+        if proj is None or rec.get("status") not in (None, "ok"):
+            continue
+        cells.append({
+            "cell": f"{rec.get('arch')}/{rec.get('shape')}"
+                    f"@{rec.get('mesh', '?')}",
+            **proj,
+        })
+    max_err = max((c["rel_error"] for c in cells), default=0.0)
+    return {
+        "cells": cells,
+        "num_cells": len(cells),
+        "max_rel_error": max_err,
+        "error_bound": error_bound,
+        "within_bound": error_bound is None or max_err <= error_bound,
+    }

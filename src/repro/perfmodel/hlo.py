@@ -84,9 +84,22 @@ class CollectiveStats:
                                    + other.buffer_bytes[k])
         return out
 
+    def wire_bytes_of(self, kinds) -> float:
+        """Wire bytes restricted to the given collective kinds."""
+        return sum(_WIRE_FACTOR[k] * self.buffer_bytes.get(k, 0)
+                   for k in kinds)
+
     def to_dict(self) -> Dict[str, Dict[str, int]]:
         return {k: {"count": self.count[k], "bytes": self.buffer_bytes[k]}
                 for k in sorted(self.count)}
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Dict[str, int]]) -> "CollectiveStats":
+        out = cls()
+        for k, v in d.items():
+            out.count[k] = int(v.get("count", 0))
+            out.buffer_bytes[k] = int(v.get("bytes", 0))
+        return out
 
 
 def parse_collectives(hlo_text: str) -> CollectiveStats:

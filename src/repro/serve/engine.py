@@ -3,9 +3,10 @@ queue with a fixed-shape KV cache (the decode_32k dry-run cell's runtime
 counterpart).
 
 SeqPoint's insight applies at serving too (paper §VII-E): per-request
-prefill cost is keyed by prompt SL, so the engine logs (SL, latency) and
-``seqpoints()`` summarizes a serving trace the same way training epochs are
-summarized.
+prefill cost is keyed by prompt SL, so the engine logs (SL, prefill
+latency) — with decode time, decode-call count, and emitted-token stats on
+the same record — and ``seqpoints()`` summarizes a serving trace the same
+way training epochs are summarized.
 """
 from __future__ import annotations
 
@@ -17,6 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.profile import EpochLog
 from repro.core.seqpoint import SeqPointSet, select_seqpoints
 from repro.models.model_zoo import Model
@@ -49,24 +51,38 @@ class ServeEngine:
 
         Pads the batch with dummy requests on a local copy only; the
         caller's list is never mutated and only the real requests are
-        returned.
+        returned. Prefill's last-position logits supply the first generated
+        token, so ``n_steps`` useful tokens cost ``n_steps - 1`` decode
+        calls.
         """
         assert len(requests) <= self.batch_size
+        mreg = obs.metrics
+        mreg.gauge("serve_queue_depth").set(len(requests))
+        mreg.gauge("serve_batch_fill").set(len(requests) / self.batch_size)
         batch = list(requests)
         while len(batch) < self.batch_size:               # pad batch
             batch.append(Request(prompt=np.zeros(4, np.int32),
                                  max_new_tokens=0))
         sl = self._pad(max(len(r.prompt) for r in batch))
         toks = np.zeros((self.batch_size, sl), np.int32)
+        real_tokens = 0
         for i, r in enumerate(batch):
             prompt = r.prompt[-sl:]       # keep the most recent sl tokens
             if len(prompt):
                 toks[i, -len(prompt):] = prompt
+            if i < len(requests):
+                real_tokens += len(prompt)
+        # fraction of the (batch, sl) prefill grid that is dummy/pad work
+        waste = 1.0 - real_tokens / float(self.batch_size * sl)
+        mreg.gauge("serve_padding_waste").set(waste)
+        mreg.histogram("serve_padding_waste_frac", sl=sl).observe(waste)
         t0 = time.perf_counter()
-        logits, caches = self._prefill(self.params,
-                                       {"tokens": jnp.asarray(toks)})
-        jax.block_until_ready(logits)
-        self.log.append(sl, time.perf_counter() - t0)
+        with obs.span("serve/prefill", sl=sl, batch=len(requests)):
+            logits, caches = self._prefill(self.params,
+                                           {"tokens": jnp.asarray(toks)})
+            jax.block_until_ready(logits)
+        prefill_dt = time.perf_counter() - t0
+        mreg.histogram("serve_prefill_s", sl=sl).observe(prefill_dt)
 
         # decode greedily; caches from prefill hold exactly sl entries, so
         # rebuild into the fixed-size serving cache
@@ -80,13 +96,26 @@ class ServeEngine:
         token = jnp.argmax(logits[:, -1] if logits.ndim == 3 else logits,
                            axis=-1).astype(jnp.int32)[:, None]
         n_steps = max((r.max_new_tokens for r in batch), default=0)
+        dec_t0 = time.perf_counter()
         for step in range(n_steps):
             for i, r in enumerate(batch):
                 if step < r.max_new_tokens:
                     r.output.append(int(token[i, 0]))
-            logits, full = self._decode(self.params, full, token,
-                                        jnp.asarray(sl + step, jnp.int32))
-            token = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+            if step + 1 >= n_steps:       # final token came from the last
+                break                     # decode (or prefill) — done
+            t1 = time.perf_counter()
+            with obs.span("serve/decode_token", pos=sl + step):
+                logits, full = self._decode(self.params, full, token,
+                                            jnp.asarray(sl + step, jnp.int32))
+                token = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+                jax.block_until_ready(token)
+            mreg.histogram("serve_decode_token_s", sl=sl).observe(
+                time.perf_counter() - t1)
+        decode_dt = time.perf_counter() - dec_t0 if n_steps else 0.0
+        self.log.append(sl, prefill_dt, decode_s=decode_dt,
+                        decode_steps=float(max(n_steps - 1, 0)),
+                        tokens_out=float(sum(r.max_new_tokens
+                                             for r in batch)))
         return requests
 
     def seqpoints(self, **kw) -> SeqPointSet:

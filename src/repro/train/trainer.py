@@ -17,6 +17,7 @@ from typing import Any, Dict, Iterator, Optional
 import jax
 import numpy as np
 
+from repro import obs
 from repro.ckpt.checkpoint import CheckpointManager
 from repro.configs.base import RunConfig
 from repro.core.profile import EpochLog
@@ -78,42 +79,67 @@ class Trainer:
             if self.run.parallelism == "tp" else 1
         dp_bytes = dp_grad_wire_bytes(
             state.params, self.run.optimizer.grad_compression, dp_deg)
+        obs.event("train_start", model=self.run.model.name, start_step=start,
+                  num_steps=num_steps, dp_degree=dp_deg, tp_degree=tp_deg)
+        mreg = obs.metrics
         sl_times: Dict[int, list] = {}
         for step in range(start, start + num_steps):
-            tokens, labels, sl = next(it)
-            batch = {"tokens": jax.numpy.asarray(tokens),
-                     "labels": jax.numpy.asarray(labels)}
-            t0 = time.perf_counter()
-            state, metrics = self.step_fn(state, batch)
-            jax.block_until_ready(metrics["loss"])
-            dt = time.perf_counter() - t0
-            # straggler mitigation: per-SL baseline — a step far beyond the
-            # running median of its padded SL marks a straggler (on real
-            # fleets this triggers hot-spare promotion; here we count + log).
-            # SLs unseen so far fall back to the all-SL median.
-            baseline_pool = sl_times.get(sl) or report.step_times
-            if baseline_pool:
-                baseline = float(np.median(baseline_pool))
-                if dt > self.straggler_factor * baseline:
-                    report.stragglers += 1
-            sl_times.setdefault(sl, []).append(dt)
-            report.losses.append(float(metrics["loss"]))
-            report.step_times.append(dt)
-            self.epoch_log.append(
-                sl, dt, dp_wire_bytes=dp_bytes,
-                tp_wire_bytes=tp_activation_wire_bytes(
-                    self.run.model, self.run.shape.global_batch, sl, tp_deg))
-            if self.ckpt is not None and (step + 1) % self.ckpt_every == 0:
-                self.ckpt.save_async(step + 1, state,
-                                     extra={"step": step + 1,
-                                            "data_state": self.data.state()})
+            with obs.span("train/step", step=step) as step_span:
+                with obs.span("train/data_fetch"):
+                    tokens, labels, sl = next(it)
+                    batch = {"tokens": jax.numpy.asarray(tokens),
+                             "labels": jax.numpy.asarray(labels)}
+                step_span.set(sl=sl)
+                t0 = time.perf_counter()
+                with obs.span("train/step_fn", sl=sl):
+                    state, metrics = self.step_fn(state, batch)
+                with obs.span("train/block_until_ready"):
+                    jax.block_until_ready(metrics["loss"])
+                dt = time.perf_counter() - t0
+                # straggler mitigation: per-SL baseline — a step far beyond
+                # the running median of its padded SL marks a straggler (on
+                # real fleets this triggers hot-spare promotion; here we
+                # count + log). SLs unseen so far fall back to the all-SL
+                # median.
+                baseline_pool = sl_times.get(sl) or report.step_times
+                if baseline_pool:
+                    baseline = float(np.median(baseline_pool))
+                    if dt > self.straggler_factor * baseline:
+                        report.stragglers += 1
+                        mreg.counter("train_stragglers_total").inc()
+                        obs.event("straggler", step=step, sl=sl, dt=dt,
+                                  baseline=baseline,
+                                  factor=self.straggler_factor)
+                sl_times.setdefault(sl, []).append(dt)
+                report.losses.append(float(metrics["loss"]))
+                report.step_times.append(dt)
+                tp_bytes = tp_activation_wire_bytes(
+                    self.run.model, self.run.shape.global_batch, sl, tp_deg)
+                self.epoch_log.append(sl, dt, dp_wire_bytes=dp_bytes,
+                                      tp_wire_bytes=tp_bytes)
+                mreg.counter("train_steps_total").inc()
+                mreg.histogram("train_step_time_s", sl=sl).observe(dt)
+                mreg.histogram("train_padded_sl").observe(sl)
+                mreg.gauge("train_dp_wire_bytes").set(dp_bytes)
+                mreg.histogram("train_tp_wire_bytes", sl=sl).observe(tp_bytes)
+                if self.ckpt is not None and (step + 1) % self.ckpt_every == 0:
+                    with obs.span("train/checkpoint_async", step=step + 1):
+                        self.ckpt.save_async(
+                            step + 1, state,
+                            extra={"step": step + 1,
+                                   "data_state": self.data.state()})
+                    obs.event("checkpoint", step=step + 1, mode="async")
         if self.ckpt is not None:
-            self.ckpt.wait()
-            self.ckpt.save(start + num_steps, state,
-                           extra={"step": start + num_steps,
-                                  "data_state": self.data.state()})
+            with obs.span("train/checkpoint_final", step=start + num_steps):
+                self.ckpt.wait()
+                self.ckpt.save(start + num_steps, state,
+                               extra={"step": start + num_steps,
+                                      "data_state": self.data.state()})
+            obs.event("checkpoint", step=start + num_steps, mode="final")
         report.steps = num_steps
         report.epoch_log = self.epoch_log
+        obs.event("train_end", steps=num_steps, stragglers=report.stragglers,
+                  total_runtime=self.epoch_log.total_runtime)
         return report
 
     def seqpoints(self, **kw) -> SeqPointSet:

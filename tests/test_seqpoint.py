@@ -32,6 +32,7 @@ def test_all_unique_mode_is_exact():
     sp = select_seqpoints(log, n_threshold=10)
     assert sp.k == 0 and sp.num_points == 4
     assert sp.error < 1e-9
+    assert sp.meta["converged"] is True      # no .get-with-guessed-default
     # weights = frequencies
     assert sorted(p.weight for p in sp.points) == [25.0] * 4
 
@@ -60,6 +61,7 @@ def test_k_search_reaches_threshold_on_smooth_runtimes():
     sp = select_seqpoints(log, error_threshold=0.02)
     assert sp.error <= 0.02
     assert sp.num_points <= 40
+    assert sp.meta["converged"] is True      # binned success path
 
 
 def test_projection_to_other_config_scales():

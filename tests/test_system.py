@@ -153,6 +153,42 @@ def test_serve_engine_does_not_mutate_requests_and_truncates():
     assert eng.log.num_iterations == 1
 
 
+def test_serve_decode_call_count_and_latency_logged():
+    """n_steps useful tokens must cost exactly n_steps - 1 decode calls
+    (prefill supplies the first token), and the serve EpochLog must carry
+    decode latency, not prefill only."""
+    from repro.serve.engine import Request, ServeEngine
+
+    cfg, run = _tiny_run()
+    model = build_model(cfg, Runtime.from_run(run))
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(model, params, batch_size=2, max_len=64,
+                      sl_granularity=16)
+    calls = {"n": 0}
+    real_decode = eng._decode
+
+    def counting_decode(*a, **kw):
+        calls["n"] += 1
+        return real_decode(*a, **kw)
+
+    eng._decode = counting_decode
+    reqs = [Request(prompt=np.arange(1, 9, dtype=np.int32),
+                    max_new_tokens=4)]
+    eng.run_batch(reqs)
+    assert len(reqs[0].output) == 4
+    assert calls["n"] == 3                    # n_steps - 1
+    rec = eng.log.iterations[-1]
+    assert rec.stats["decode_steps"] == 3.0
+    assert rec.stats["decode_s"] >= 0.0
+    assert "tokens_out" in rec.stats
+
+    # a single-token request needs no decode call at all
+    calls["n"] = 0
+    eng.run_batch([Request(prompt=np.arange(1, 5, dtype=np.int32),
+                           max_new_tokens=1)])
+    assert calls["n"] == 0
+
+
 def test_straggler_counter():
     cfg, run = _tiny_run()
     model = build_model(cfg, Runtime.from_run(run))
