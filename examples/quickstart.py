@@ -10,11 +10,20 @@ also writes a Perfetto-loadable Chrome trace, a metrics snapshot with
 SL-keyed step-time histograms, and a JSONL event log, and checks the
 SeqPoint projection live against the measured epoch (repro.obs).
 
+With fault injection armed (``REPRO_FAULTS=<plan>`` or ``--chaos``), the run
+finishes with a chaos drill: a short training run under injected faults
+(NaN loss, preemption, corrupt checkpoint, flaky loader) that must recover
+and produce the same SeqPoint selection as a fault-free reference run
+(repro.resilience).
+
     PYTHONPATH=src python examples/quickstart.py [--obs-dir results/obs]
+    REPRO_FAULTS="nan_loss@5,preempt@9,ckpt_corrupt@9" \
+        PYTHONPATH=src python examples/quickstart.py
 """
 import argparse
 import os
 import sys
+import tempfile
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
@@ -26,11 +35,97 @@ from repro.core.characterize import WallclockProvider, epoch_log_from_plan
 from repro.core.reproduction import SETUPS
 from repro.data.batching import plan_epoch
 
+# fires data-loader, NaN-loss, straggler, preemption, and silent-checkpoint
+# -corruption faults inside a 14-step run checkpointed every 4 steps
+DEFAULT_CHAOS_SPEC = ("data_fetch@2,nan_loss@5,straggler@6:delay=0.05,"
+                      "preempt@9,ckpt_corrupt@9")
+
+
+def chaos_drill() -> bool:
+    """Train under injected faults, recover, and check SeqPoint parity
+    against a fault-free reference run. Returns True on parity."""
+    from repro.configs import (
+        MeshConfig,
+        OptimizerConfig,
+        RunConfig,
+        ShapeConfig,
+        StepKind,
+        smoke_config,
+    )
+    from repro.data.batching import DataIterator
+    from repro.data.synthetic import IWSLT_LIKE
+    from repro.models import Runtime, build_model
+    from repro.resilience import faults
+    from repro.train.trainer import Trainer
+
+    spec = os.environ.get("REPRO_FAULTS") or DEFAULT_CHAOS_SPEC
+    seed = int(os.environ.get("REPRO_FAULTS_SEED", "0"))
+    steps = 14
+
+    def make_trainer(ckpt_dir):
+        cfg = smoke_config("starcoder2-3b").with_overrides(
+            num_layers=2, d_model=64, d_ff=128, vocab_size=256)
+        run = RunConfig(
+            model=cfg,
+            shape=ShapeConfig("chaos", seq_len=32, global_batch=8,
+                              step=StepKind.TRAIN),
+            mesh=MeshConfig(shape=(1,), axes=("data",)),
+            optimizer=OptimizerConfig(lr=1e-3, warmup_steps=2),
+            param_dtype="float32", compute_dtype="float32")
+        data = DataIterator(IWSLT_LIKE, samples_per_epoch=256, batch_size=8,
+                            vocab_size=cfg.vocab_size, granularity=8, seed=1)
+        model = build_model(cfg, Runtime.from_run(run))
+        return Trainer(model, run, data, ckpt_dir=ckpt_dir, ckpt_every=4,
+                       total_steps=steps + 2)
+
+    obs.event("chaos_drill_start", spec=spec, seed=seed, steps=steps)
+    print(f"\nchaos drill: {steps} steps under REPRO_FAULTS={spec!r}")
+    faults.install(None)                      # fault-free reference first
+    with tempfile.TemporaryDirectory() as d:
+        ref_tr = make_trainer(os.path.join(d, "ck"))
+        ref_rep = ref_tr.train(steps)
+        ref_sp = ref_tr.seqpoints(error_threshold=0.1, n_threshold=32)
+
+    faults.install(faults.FaultPlan.parse(spec, seed=seed))
+    with tempfile.TemporaryDirectory() as d:
+        ck = os.path.join(d, "ck")
+        tr = make_trainer(ck)
+        rep = tr.train(steps)
+        losses = list(rep.losses)
+        pos = (rep.resumed_from or 0) + rep.steps
+        restarts = 0
+        while rep.preempted or pos < steps:   # resume until the run is done
+            restarts += 1
+            tr = make_trainer(ck)
+            rep = tr.train(steps - pos)
+            start = rep.resumed_from or 0
+            losses = losses[:start] + list(rep.losses)
+            pos = start + rep.steps
+        sp = tr.seqpoints(error_threshold=0.1, n_threshold=32)
+    faults.install(None)
+
+    parity = (sp.seq_lens == ref_sp.seq_lens
+              and np.allclose(sp.weights, ref_sp.weights)
+              and np.allclose(losses, ref_rep.losses, rtol=1e-5, atol=1e-6))
+    print(f"  recovered: {restarts} restart(s), {rep.rollbacks} rollback(s) "
+          f"in final segment, epoch log {tr.epoch_log.num_iterations} "
+          f"iterations")
+    print(f"  seqpoint parity vs fault-free run: "
+          f"{'OK' if parity else 'MISMATCH'} "
+          f"(SLs {sp.seq_lens} == {ref_sp.seq_lens})")
+    obs.event("chaos_drill_end", ok=bool(parity), restarts=restarts,
+              seqpoint_sls=sp.seq_lens)
+    return parity
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--obs-dir", default=os.environ.get("REPRO_OBS_DIR"),
                     help="enable tracing/metrics/events, export here")
+    ap.add_argument("--chaos", action="store_true",
+                    default=bool(os.environ.get("REPRO_FAULTS")),
+                    help="run the fault-injection recovery drill "
+                         "(auto-on when REPRO_FAULTS is set)")
     args = ap.parse_args()
     if args.obs_dir:
         obs.enable(out_dir=args.obs_dir)
@@ -78,6 +173,13 @@ def main() -> None:
           f"{len(rep.per_sl)} SLs tracked)")
     obs.event("projection_report", projected=rep.projected_total,
               measured=rep.measured_total, rel_error=rep.rel_error)
+
+    if args.chaos:
+        if not chaos_drill():
+            obs.event("run_end", example="quickstart", ok=False)
+            if args.obs_dir:
+                obs.export_all()
+            sys.exit(1)
 
     obs.event("run_end", example="quickstart")
     if args.obs_dir:

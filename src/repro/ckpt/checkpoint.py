@@ -15,6 +15,14 @@ fault-tolerance pattern at fleet scale.
 Restore is *resharding*: arrays are loaded on host and ``jax.device_put``
 with the (possibly different) target sharding, so a run checkpointed on one
 mesh resumes on another (elastic scaling across pod counts).
+
+Restore is also *defensive*: the manifest's recorded sha256 of
+``arrays.npz`` is verified before anything is loaded, and a corrupt or
+truncated step falls back to the previous ``step_<N>`` instead of killing
+the resume (structural mismatches — wrong shapes, missing leaves — still
+raise, because an older checkpoint would not fix those). Background-write
+failures are captured and re-raised at the next ``wait()``/``save()``
+rather than silently discovered at restore time.
 """
 from __future__ import annotations
 
@@ -24,10 +32,20 @@ import os
 import shutil
 import threading
 import time
+import zipfile
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
+
+from repro import obs
+from repro.resilience import faults
+
+# errors that mean "this step's files are damaged" — safe to fall back past
+# (injected TransientFault is deliberately NOT here: transient I/O should be
+# retried on the same step by the caller, not skipped to an older state)
+_DAMAGE = (IOError, OSError, EOFError, zipfile.BadZipFile,
+           json.JSONDecodeError)
 
 Params = Any
 
@@ -86,12 +104,19 @@ class CheckpointManager:
     # ------------------------------------------------------------------
     def save(self, step: int, state: Params, *,
              extra: Optional[dict] = None) -> str:
+        self.wait()             # surface any pending background-write error
         flat = _flatten(state)
         return self._write(step, flat, extra or {})
 
     def save_async(self, step: int, state: Params, *,
                    extra: Optional[dict] = None) -> None:
-        """Snapshot synchronously (device->host), write in background."""
+        """Snapshot synchronously (device->host), write in background.
+
+        A failing background write is captured and re-raised at the next
+        ``wait()``/``save()``/``save_async()`` (plus an immediate obs
+        event), so a dying checkpoint disk shows up within one save
+        interval, not at restore time.
+        """
         self.wait()
         flat = _flatten(state)                        # blocking copy to host
 
@@ -100,6 +125,8 @@ class CheckpointManager:
                 self._write(step, flat, extra or {})
             except BaseException as e:                 # noqa: BLE001
                 self._error = e
+                obs.metrics.counter("ckpt_async_errors_total").inc()
+                obs.event("ckpt_async_error", step=step, error=repr(e))
 
         self._thread = threading.Thread(target=work, daemon=True)
         self._thread.start()
@@ -114,6 +141,7 @@ class CheckpointManager:
 
     def _write(self, step: int, flat: Dict[str, np.ndarray],
                extra: dict) -> str:
+        faults.fire("ckpt_save", step)
         final = self._step_dir(step)
         tmp = final + ".tmp"
         if os.path.exists(tmp):
@@ -123,6 +151,12 @@ class CheckpointManager:
         np.savez(npz_path, **{k: v for k, v in flat.items()})
         with open(npz_path, "rb") as f:
             digest = hashlib.sha256(f.read()).hexdigest()
+        if faults.check("ckpt_corrupt", step) is not None:
+            # silent media corruption: damage the shard AFTER the digest is
+            # recorded, so only restore-time verification can catch it
+            with open(npz_path, "r+b") as f:
+                f.seek(min(64, os.path.getsize(npz_path) - 4))
+                f.write(b"\xde\xad\xbe\xef")
         manifest = {
             "step": step,
             "time": time.time(),
@@ -147,14 +181,58 @@ class CheckpointManager:
             shutil.rmtree(self._step_dir(s), ignore_errors=True)
 
     # ------------------------------------------------------------------
+    def verify_step(self, step: int) -> bool:
+        """True iff ``step``'s shard matches its manifest-recorded sha256."""
+        try:
+            d = self._step_dir(step)
+            with open(os.path.join(d, "manifest.json")) as f:
+                manifest = json.load(f)
+            with open(os.path.join(d, "arrays.npz"), "rb") as f:
+                digest = hashlib.sha256(f.read()).hexdigest()
+            return digest == manifest["sha256"]
+        except _DAMAGE:
+            return False
+
     def restore(self, like: Params, step: Optional[int] = None, *,
-                shardings: Optional[Params] = None,
-                verify: bool = True) -> Tuple[Params, dict]:
+                shardings: Optional[Params] = None, verify: bool = True,
+                fallback: Optional[bool] = None) -> Tuple[Params, dict]:
         """Load into the structure of ``like``; optionally device_put with
-        target shardings (mesh may differ from the saving run)."""
-        step = step if step is not None else self.latest_step()
+        target shardings (mesh may differ from the saving run).
+
+        The shard sha256 is verified against the manifest before loading.
+        With ``fallback`` (default: on when ``step`` is not pinned), a
+        corrupt/truncated step is skipped and the previous ``step_<N>`` is
+        tried, oldest-surviving wins; ``IOError`` only if none is usable.
+        """
+        faults.fire("ckpt_restore", -1 if step is None else step)
+        steps = self.steps()
         if step is None:
-            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+            if not steps:
+                raise FileNotFoundError(f"no checkpoints in {self.dir}")
+            fallback = True if fallback is None else fallback
+            candidates = list(reversed(steps))
+        else:
+            fallback = False if fallback is None else fallback
+            candidates = [step] + [s for s in reversed(steps) if s < step]
+        if not fallback:
+            candidates = candidates[:1]
+        last_err: Optional[BaseException] = None
+        for s in candidates:
+            try:
+                return self._restore_step(s, like, shardings=shardings,
+                                          verify=verify)
+            except _DAMAGE as e:
+                last_err = e
+                obs.metrics.counter("ckpt_fallback_total").inc()
+                obs.event("ckpt_restore_failed", step=s, error=repr(e),
+                          will_fallback=s != candidates[-1])
+                continue
+        raise IOError(f"no usable checkpoint in {self.dir} "
+                      f"(tried {candidates}): {last_err!r}")
+
+    def _restore_step(self, step: int, like: Params, *,
+                      shardings: Optional[Params],
+                      verify: bool) -> Tuple[Params, dict]:
         d = self._step_dir(step)
         with open(os.path.join(d, "manifest.json")) as f:
             manifest = json.load(f)

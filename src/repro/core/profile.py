@@ -52,6 +52,22 @@ class EpochLog:
         return np.array([it.runtime for it in self.iterations])
 
     # ------------------------------------------------------------------
+    def to_jsonable(self) -> dict:
+        """Pure-JSON form (checkpoint manifests carry the partial log so a
+        crash-resumed run re-extends the epoch bit-for-bit)."""
+        return {"meta": dict(self.meta),
+                "iterations": [[int(it.seq_len), float(it.runtime),
+                                {k: float(v) for k, v in it.stats.items()}]
+                               for it in self.iterations]}
+
+    @classmethod
+    def from_jsonable(cls, obj: Mapping) -> "EpochLog":
+        log = cls(meta=dict(obj.get("meta", {})))
+        for sl, rt, stats in obj.get("iterations", []):
+            log.append(int(sl), float(rt), **stats)
+        return log
+
+    # ------------------------------------------------------------------
     def by_seq_len(self) -> "SLTable":
         """Aggregate to unique SLs (paper key obs. 5: iterations of one SL
         behave the same; we average out measurement noise)."""

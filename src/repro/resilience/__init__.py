@@ -1,0 +1,43 @@
+"""repro.resilience — fault injection, training guardrails, and
+crash-consistent recovery.
+
+``faults`` is the deterministic chaos switchboard (env-driven via
+``REPRO_FAULTS``), ``guards`` are the training-health invariants, and
+``recovery`` holds retries, skip lists, and the crash-consistency contract
+for checkpoint extras. See ``src/repro/resilience/README.md``.
+"""
+from __future__ import annotations
+
+from repro.resilience import faults
+from repro.resilience.faults import (
+    FaultError,
+    FaultPlan,
+    FaultSpec,
+    PreemptionFault,
+    TransientFault,
+)
+from repro.resilience.guards import (
+    DivergenceDetector,
+    DivergenceError,
+    GuardViolation,
+    NonFiniteLossError,
+    StepTimeWatchdog,
+    WatchdogVerdict,
+    check_finite,
+)
+from repro.resilience.recovery import (
+    RETRYABLE,
+    BatchSkipList,
+    RecoveryPolicy,
+    pack_train_extra,
+    retry_with_backoff,
+    unpack_train_extra,
+)
+
+__all__ = [
+    "RETRYABLE", "BatchSkipList", "DivergenceDetector", "DivergenceError",
+    "FaultError", "FaultPlan", "FaultSpec", "GuardViolation",
+    "NonFiniteLossError", "PreemptionFault", "RecoveryPolicy",
+    "StepTimeWatchdog", "TransientFault", "WatchdogVerdict", "check_finite",
+    "faults", "pack_train_extra", "retry_with_backoff", "unpack_train_extra",
+]

@@ -1,0 +1,125 @@
+"""Recovery mechanics: retry-with-backoff, poison-batch skip lists, and
+crash-consistent train-state snapshots.
+
+Three recovery tiers, cheapest first:
+
+1. **Retry** (`retry_with_backoff`) — transient faults (flaky loader,
+   hiccuping checkpoint disk, one failed decode) are retried with
+   exponential backoff; every retry is an obs event + counter.
+2. **Rollback** — a guard violation (NaN/inf loss, divergence) restores the
+   last good checkpoint *including* the data-iterator state and the partial
+   EpochLog, so the replayed steps re-log identically and SeqPoint
+   selection is unaffected by the excursion. A batch that keeps failing
+   after rollback (`BatchSkipList`) is declared poison and skipped.
+3. **Preemption-safe resume** — a simulated preemption writes an emergency
+   checkpoint whose ``extra`` carries the iterator position *of the
+   interrupted batch* and the partial EpochLog; the resumed process
+   re-fetches that exact batch and continues the log bit-for-bit.
+
+`pack_train_extra` / `unpack_train_extra` define the crash-consistency
+contract between the trainer and the checkpoint manifest.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple, TypeVar
+
+from repro import obs
+from repro.core.profile import EpochLog
+from repro.resilience.faults import TransientFault
+
+T = TypeVar("T")
+
+RETRYABLE = (TransientFault, OSError)
+
+
+@dataclass(frozen=True)
+class RecoveryPolicy:
+    """Knobs for the three recovery tiers (one object, threaded through
+    trainer and serve engine)."""
+
+    max_retries: int = 3            # per retryable operation
+    backoff_base_s: float = 0.02    # first retry delay; doubles per attempt
+    backoff_factor: float = 2.0
+    max_rollbacks: int = 8          # per train() call; then re-raise
+    skip_after_failures: int = 2    # rollbacks on one batch before skipping
+    divergence_ratio: float = 4.0   # loss vs EMA (guards.DivergenceDetector)
+    divergence_patience: int = 5
+    check_grads: bool = True        # guard grad_norm finiteness too
+
+
+def retry_with_backoff(fn: Callable[[], T], *, retries: int = 3,
+                       base_delay: float = 0.02, factor: float = 2.0,
+                       retryable: tuple = RETRYABLE,
+                       sleep: Callable[[float], None] = time.sleep,
+                       label: str = "") -> T:
+    """Call ``fn`` until it succeeds or ``retries`` retryable failures.
+
+    Non-retryable exceptions (including ``PreemptionFault``) propagate
+    immediately; the last retryable failure is re-raised unchanged.
+    """
+    attempt = 0
+    while True:
+        try:
+            return fn()
+        except retryable as e:                         # noqa: PERF203
+            attempt += 1
+            if attempt > retries:
+                raise
+            d = base_delay * (factor ** (attempt - 1))
+            obs.metrics.counter("resilience_retries_total",
+                                label=label or "unlabeled").inc()
+            obs.event("retry", label=label, attempt=attempt,
+                      delay_s=d, error=repr(e))
+            if d > 0:
+                sleep(d)
+
+
+class BatchSkipList:
+    """Failure counts per batch key; a batch that causes ``skip_after``
+    rollbacks is poison and gets skipped on the next replay.
+
+    Keys are (epoch, batch_index) — the deterministic identity of a batch in
+    the resumable iterator, stable across rollbacks and process restarts
+    within one plan.
+    """
+
+    def __init__(self, skip_after: int = 2):
+        self.skip_after = max(1, int(skip_after))
+        self._failures: Dict[Any, int] = {}
+        self._skip: set = set()
+
+    def record_failure(self, key: Any) -> bool:
+        """Note a rollback caused at ``key``; True once it becomes poison."""
+        n = self._failures.get(key, 0) + 1
+        self._failures[key] = n
+        if n >= self.skip_after:
+            self._skip.add(key)
+        return key in self._skip
+
+    def should_skip(self, key: Any) -> bool:
+        return key in self._skip
+
+    @property
+    def poisoned(self) -> set:
+        return set(self._skip)
+
+
+# --------------------------------------------------------------------------
+# crash-consistency contract for the checkpoint ``extra`` payload
+
+
+def pack_train_extra(step: int, data_state: Dict[str, int],
+                     epoch_log: EpochLog) -> dict:
+    return {"step": int(step), "data_state": dict(data_state),
+            "epoch_log": epoch_log.to_jsonable()}
+
+
+def unpack_train_extra(extra: dict) -> Tuple[int, Optional[Dict[str, int]],
+                                             Optional[EpochLog]]:
+    step = int(extra["step"])
+    data_state = extra.get("data_state")
+    log = EpochLog.from_jsonable(extra["epoch_log"]) \
+        if "epoch_log" in extra else None
+    return step, data_state, log

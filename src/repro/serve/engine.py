@@ -22,6 +22,8 @@ from repro import obs
 from repro.core.profile import EpochLog
 from repro.core.seqpoint import SeqPointSet, select_seqpoints
 from repro.models.model_zoo import Model
+from repro.resilience import faults
+from repro.resilience.recovery import RecoveryPolicy, retry_with_backoff
 
 
 @dataclass
@@ -29,18 +31,24 @@ class Request:
     prompt: np.ndarray            # (S,) int32
     max_new_tokens: int = 16
     output: List[int] = field(default_factory=list)
+    shed: bool = False            # dropped on overload, never ran
 
 
 class ServeEngine:
     def __init__(self, model: Model, params, *, batch_size: int = 4,
-                 max_len: int = 512, sl_granularity: int = 32):
+                 max_len: int = 512, sl_granularity: int = 32,
+                 deadline_s: Optional[float] = None,
+                 policy: Optional[RecoveryPolicy] = None):
         self.model = model
         self.params = params
         self.batch_size = batch_size
         self.max_len = max_len
         self.gran = sl_granularity
+        self.deadline_s = deadline_s
+        self.policy = policy or RecoveryPolicy()
         self._prefill = jax.jit(model.prefill)
         self._decode = jax.jit(model.decode_step, donate_argnums=1)
+        self._decode_calls = 0
         self.log = EpochLog(meta={"kind": "serve"})
 
     def _pad(self, sl: int) -> int:
@@ -54,12 +62,27 @@ class ServeEngine:
         returned. Prefill's last-position logits supply the first generated
         token, so ``n_steps`` useful tokens cost ``n_steps - 1`` decode
         calls.
+
+        Overload sheds instead of crashing: requests beyond ``batch_size``
+        come back with ``shed=True`` and empty output for the caller to
+        requeue. With ``deadline_s`` set, decode stops once the batch has
+        used its budget (prefill included) and the remaining tokens are
+        curtailed — latency SLO over completion. Transient decode faults
+        are retried with backoff (the injected ones fire before the jitted
+        call, so no cache state is lost).
         """
-        assert len(requests) <= self.batch_size
         mreg = obs.metrics
         mreg.gauge("serve_queue_depth").set(len(requests))
-        mreg.gauge("serve_batch_fill").set(len(requests) / self.batch_size)
-        batch = list(requests)
+        admitted = requests[:self.batch_size]
+        for r in requests[self.batch_size:]:              # shed-on-overload
+            r.shed = True
+        n_shed = len(requests) - len(admitted)
+        if n_shed:
+            mreg.counter("serve_shed_total").inc(n_shed)
+            obs.event("serve_shed", count=n_shed, admitted=len(admitted))
+        mreg.gauge("serve_batch_fill").set(len(admitted) / self.batch_size)
+        batch_t0 = time.perf_counter()                    # deadline clock
+        batch = list(admitted)
         while len(batch) < self.batch_size:               # pad batch
             batch.append(Request(prompt=np.zeros(4, np.int32),
                                  max_new_tokens=0))
@@ -70,14 +93,14 @@ class ServeEngine:
             prompt = r.prompt[-sl:]       # keep the most recent sl tokens
             if len(prompt):
                 toks[i, -len(prompt):] = prompt
-            if i < len(requests):
+            if i < len(admitted):
                 real_tokens += len(prompt)
         # fraction of the (batch, sl) prefill grid that is dummy/pad work
         waste = 1.0 - real_tokens / float(self.batch_size * sl)
         mreg.gauge("serve_padding_waste").set(waste)
         mreg.histogram("serve_padding_waste_frac", sl=sl).observe(waste)
         t0 = time.perf_counter()
-        with obs.span("serve/prefill", sl=sl, batch=len(requests)):
+        with obs.span("serve/prefill", sl=sl, batch=len(admitted)):
             logits, caches = self._prefill(self.params,
                                            {"tokens": jnp.asarray(toks)})
             jax.block_until_ready(logits)
@@ -97,25 +120,48 @@ class ServeEngine:
                            axis=-1).astype(jnp.int32)[:, None]
         n_steps = max((r.max_new_tokens for r in batch), default=0)
         dec_t0 = time.perf_counter()
+        emitted = 0                       # tokens delivered to real requests
+        decode_calls = 0
         for step in range(n_steps):
             for i, r in enumerate(batch):
                 if step < r.max_new_tokens:
                     r.output.append(int(token[i, 0]))
+                    if i < len(admitted):
+                        emitted += 1
             if step + 1 >= n_steps:       # final token came from the last
                 break                     # decode (or prefill) — done
+            if self.deadline_s is not None and \
+                    time.perf_counter() - batch_t0 > self.deadline_s:
+                curtailed = sum(max(0, r.max_new_tokens - len(r.output))
+                                for r in admitted)
+                mreg.counter("serve_deadline_exceeded_total").inc()
+                obs.event("serve_deadline", sl=sl,
+                          deadline_s=self.deadline_s,
+                          curtailed_tokens=curtailed)
+                break
             t1 = time.perf_counter()
             with obs.span("serve/decode_token", pos=sl + step):
-                logits, full = self._decode(self.params, full, token,
-                                            jnp.asarray(sl + step, jnp.int32))
+                def decode_once():
+                    faults.fire("decode", self._decode_calls)
+                    return self._decode(self.params, full, token,
+                                        jnp.asarray(sl + step, jnp.int32))
+                logits, full = retry_with_backoff(
+                    decode_once, retries=self.policy.max_retries,
+                    base_delay=self.policy.backoff_base_s,
+                    factor=self.policy.backoff_factor, label="serve_decode")
+                self._decode_calls += 1
+                decode_calls += 1
                 token = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
                 jax.block_until_ready(token)
             mreg.histogram("serve_decode_token_s", sl=sl).observe(
                 time.perf_counter() - t1)
         decode_dt = time.perf_counter() - dec_t0 if n_steps else 0.0
+        # tokens_out counts tokens actually emitted to real requests — not
+        # requested tokens summed over the padded batch — so serve
+        # throughput metrics stay honest under shedding and deadlines
         self.log.append(sl, prefill_dt, decode_s=decode_dt,
-                        decode_steps=float(max(n_steps - 1, 0)),
-                        tokens_out=float(sum(r.max_new_tokens
-                                             for r in batch)))
+                        decode_steps=float(decode_calls),
+                        tokens_out=float(emitted))
         return requests
 
     def seqpoints(self, **kw) -> SeqPointSet:

@@ -1,5 +1,5 @@
 """Training loop: auto-resume, async checkpoints, straggler detection,
-SeqPoint epoch logging as a first-class hook.
+SeqPoint epoch logging as a first-class hook — hardened for fleet faults.
 
 The trainer logs every iteration's (padded SL, wallclock) into an
 ``EpochLog`` — after one epoch, ``seqpoints()`` hands back the
@@ -7,12 +7,25 @@ representative iterations, which is how a fleet user would profile a new
 hardware/software config for this exact (model, dataset, batch-size)
 combination without re-running the epoch (paper §V-C step 1 integrated at
 the point the data already flows).
+
+That projection is only trustworthy if the log survives real fleet
+conditions, so the step loop is wrapped in a recovery ladder
+(``repro.resilience``):
+
+* transient data/checkpoint faults retry with backoff;
+* a NaN/inf or diverging loss rolls back to the last good checkpoint —
+  restoring params, optimizer, data-iterator position *and* the partial
+  EpochLog — and a batch that fails repeatedly is skipped as poison;
+* a preemption writes an emergency checkpoint pointing at the interrupted
+  batch, so the resumed process replays it and the stitched EpochLog (and
+  hence ``select_seqpoints``) matches the fault-free run bit-for-bit;
+* a per-SL running-median watchdog flags stragglers (and injected ones).
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, Iterator, Optional
+from typing import Any, Callable, Dict, Iterator, Optional, Tuple
 
 import jax
 import numpy as np
@@ -26,6 +39,21 @@ from repro.dist.sharding import tp_activation_wire_bytes
 from repro.core.seqpoint import SeqPointSet, select_seqpoints
 from repro.data.batching import DataIterator
 from repro.models.model_zoo import Model
+from repro.resilience import faults
+from repro.resilience.guards import (
+    DivergenceDetector,
+    GuardViolation,
+    StepTimeWatchdog,
+    check_finite,
+)
+from repro.resilience.faults import PreemptionFault, TransientFault
+from repro.resilience.recovery import (
+    BatchSkipList,
+    RecoveryPolicy,
+    pack_train_extra,
+    retry_with_backoff,
+    unpack_train_extra,
+)
 from repro.train.train_step import TrainState, build_train_step, \
     init_train_state
 
@@ -38,32 +66,58 @@ class TrainerReport:
     step_times: list = field(default_factory=list)
     stragglers: int = 0
     epoch_log: Optional[EpochLog] = None
+    # resilience accounting
+    preempted: bool = False          # train() returned early; resume to finish
+    rollbacks: int = 0
+    guard_violations: int = 0
+    skipped_batches: int = 0
 
 
 class Trainer:
     def __init__(self, model: Model, run: RunConfig, data: DataIterator, *,
                  ckpt_dir: Optional[str] = None, ckpt_every: int = 50,
-                 straggler_factor: float = 3.0, total_steps: int = 1000):
+                 straggler_factor: float = 3.0, total_steps: int = 1000,
+                 policy: Optional[RecoveryPolicy] = None,
+                 timer: Callable[[], float] = time.perf_counter):
         self.model = model
         self.run = run
         self.data = data
         self.ckpt = CheckpointManager(ckpt_dir) if ckpt_dir else None
         self.ckpt_every = ckpt_every
-        self.straggler_factor = straggler_factor
+        self.policy = policy or RecoveryPolicy()
+        self.timer = timer
+        self.watchdog = StepTimeWatchdog(factor=straggler_factor)
+        self.divergence = DivergenceDetector(
+            ratio=self.policy.divergence_ratio,
+            patience=self.policy.divergence_patience)
         self.step_fn = jax.jit(build_train_step(model, run, total_steps),
                                donate_argnums=0)
         self.epoch_log = EpochLog(meta={"model": run.model.name})
+
+    # ------------------------------------------------------------------
+    def _extra(self, step: int) -> dict:
+        return pack_train_extra(step, self.data.state(), self.epoch_log)
+
+    def _retry(self, fn, label: str):
+        return retry_with_backoff(
+            fn, retries=self.policy.max_retries,
+            base_delay=self.policy.backoff_base_s,
+            factor=self.policy.backoff_factor, label=label)
 
     def init_or_resume(self, rng: jax.Array) -> tuple[TrainState, int]:
         state = init_train_state(self.model, self.run, rng)
         start = 0
         if self.ckpt is not None and self.ckpt.latest_step() is not None:
-            state, extra = self.ckpt.restore(state)
-            start = int(extra.get("step", self.ckpt.latest_step()))
-            if "data_state" in extra:
-                self.data.restore(extra["data_state"])
+            state, extra = self._retry(lambda: self.ckpt.restore(state),
+                                       label="ckpt_restore")
+            start, data_state, log = unpack_train_extra(extra)
+            if data_state is not None:
+                self.data.restore(data_state)
+            if log is not None:
+                self.epoch_log = log
         return state, start
 
+    # ------------------------------------------------------------------
     def train(self, num_steps: int, rng: Optional[jax.Array] = None
               ) -> TrainerReport:
         rng = jax.random.PRNGKey(self.run.seed) if rng is None else rng
@@ -82,64 +136,179 @@ class Trainer:
         obs.event("train_start", model=self.run.model.name, start_step=start,
                   num_steps=num_steps, dp_degree=dp_deg, tp_degree=tp_deg)
         mreg = obs.metrics
-        sl_times: Dict[int, list] = {}
-        for step in range(start, start + num_steps):
-            with obs.span("train/step", step=step) as step_span:
-                with obs.span("train/data_fetch"):
-                    tokens, labels, sl = next(it)
-                    batch = {"tokens": jax.numpy.asarray(tokens),
-                             "labels": jax.numpy.asarray(labels)}
-                step_span.set(sl=sl)
-                t0 = time.perf_counter()
-                with obs.span("train/step_fn", sl=sl):
-                    state, metrics = self.step_fn(state, batch)
-                with obs.span("train/block_until_ready"):
-                    jax.block_until_ready(metrics["loss"])
-                dt = time.perf_counter() - t0
-                # straggler mitigation: per-SL baseline — a step far beyond
-                # the running median of its padded SL marks a straggler (on
-                # real fleets this triggers hot-spare promotion; here we
-                # count + log). SLs unseen so far fall back to the all-SL
-                # median.
-                baseline_pool = sl_times.get(sl) or report.step_times
-                if baseline_pool:
-                    baseline = float(np.median(baseline_pool))
-                    if dt > self.straggler_factor * baseline:
-                        report.stragglers += 1
-                        mreg.counter("train_stragglers_total").inc()
-                        obs.event("straggler", step=step, sl=sl, dt=dt,
-                                  baseline=baseline,
-                                  factor=self.straggler_factor)
-                sl_times.setdefault(sl, []).append(dt)
-                report.losses.append(float(metrics["loss"]))
-                report.step_times.append(dt)
-                tp_bytes = tp_activation_wire_bytes(
-                    self.run.model, self.run.shape.global_batch, sl, tp_deg)
-                self.epoch_log.append(sl, dt, dp_wire_bytes=dp_bytes,
-                                      tp_wire_bytes=tp_bytes)
-                mreg.counter("train_steps_total").inc()
-                mreg.histogram("train_step_time_s", sl=sl).observe(dt)
-                mreg.histogram("train_padded_sl").observe(sl)
-                mreg.gauge("train_dp_wire_bytes").set(dp_bytes)
-                mreg.histogram("train_tp_wire_bytes", sl=sl).observe(tp_bytes)
-                if self.ckpt is not None and (step + 1) % self.ckpt_every == 0:
-                    with obs.span("train/checkpoint_async", step=step + 1):
-                        self.ckpt.save_async(
-                            step + 1, state,
-                            extra={"step": step + 1,
-                                   "data_state": self.data.state()})
-                    obs.event("checkpoint", step=step + 1, mode="async")
+        skiplist = BatchSkipList(skip_after=self.policy.skip_after_failures)
+        rollbacks = 0
+        end = start + num_steps
+        step = start
+        # rollback safety net: guarantee a restorable checkpoint exists
+        # before the first optimizer step can fail
+        if self.ckpt is not None and self.ckpt.latest_step() is None:
+            self._retry(lambda: self.ckpt.save(start, state,
+                                               extra=self._extra(start)),
+                        label="ckpt_save")
+            obs.event("checkpoint", step=start, mode="initial")
+        while step < end:
+            # iterator position BEFORE the fetch: the identity of the batch
+            # about to run, and the resume point if this step is preempted
+            pre_fetch = self.data.state()
+            batch_key = (pre_fetch["epoch"], pre_fetch["batch_index"])
+            if skiplist.should_skip(batch_key):
+                next(it)                              # discard poison batch
+                report.skipped_batches += 1
+                mreg.counter("train_skipped_batches_total").inc()
+                obs.event("poison_batch_skipped", step=step,
+                          epoch=batch_key[0], batch_index=batch_key[1])
+                continue
+            new_state = None
+            try:
+                with obs.span("train/step", step=step) as step_span:
+                    with obs.span("train/data_fetch"):
+                        def fetch():
+                            faults.fire("data_fetch", step)
+                            return next(it)
+                        tokens, labels, sl = self._retry(fetch,
+                                                         label="data_fetch")
+                        batch = {"tokens": jax.numpy.asarray(tokens),
+                                 "labels": jax.numpy.asarray(labels)}
+                    step_span.set(sl=sl)
+                    faults.fire("preempt", step)
+                    t0 = self.timer()
+                    with obs.span("train/step_fn", sl=sl):
+                        new_state, metrics = self.step_fn(state, batch)
+                    with obs.span("train/block_until_ready"):
+                        jax.block_until_ready(metrics["loss"])
+                    dt = self.timer() - t0
+                    dt += faults.delay("straggler", step)
+                    loss = faults.corrupt("nan_loss", step,
+                                          float(metrics["loss"]))
+                    check_finite(loss, name="loss", step=step)
+                    if self.policy.check_grads and "grad_norm" in metrics:
+                        check_finite(float(metrics["grad_norm"]),
+                                     name="grad_norm", step=step)
+                    self.divergence.update(loss, step=step)
+            except PreemptionFault:
+                return self._handle_preemption(step, start, state,
+                                               pre_fetch, report)
+            except GuardViolation as e:
+                report.guard_violations += 1
+                mreg.counter("train_guard_violations_total").inc()
+                obs.event("guard_violation", step=step, error=str(e),
+                          epoch=batch_key[0], batch_index=batch_key[1])
+                if self.ckpt is None or rollbacks >= self.policy.max_rollbacks:
+                    raise
+                rollbacks += 1
+                report.rollbacks += 1
+                now_poison = skiplist.record_failure(batch_key)
+                state, step = self._rollback(
+                    new_state if new_state is not None else state,
+                    start, report, poison=now_poison)
+                it = iter(self.data)      # regenerate from restored position
+                continue
+            # -- step accepted ------------------------------------------
+            state = new_state
+            verdict = self.watchdog.observe(sl, dt)
+            if verdict.is_straggler:
+                report.stragglers += 1
+                mreg.counter("train_stragglers_total").inc()
+                obs.event("straggler", step=step, sl=sl, dt=dt,
+                          baseline=verdict.baseline,
+                          factor=self.watchdog.factor)
+            report.losses.append(loss)
+            report.step_times.append(dt)
+            tp_bytes = tp_activation_wire_bytes(
+                self.run.model, self.run.shape.global_batch, sl, tp_deg)
+            self.epoch_log.append(sl, dt, dp_wire_bytes=dp_bytes,
+                                  tp_wire_bytes=tp_bytes)
+            mreg.counter("train_steps_total").inc()
+            mreg.histogram("train_step_time_s", sl=sl).observe(dt)
+            mreg.histogram("train_padded_sl").observe(sl)
+            mreg.gauge("train_dp_wire_bytes").set(dp_bytes)
+            mreg.histogram("train_tp_wire_bytes", sl=sl).observe(tp_bytes)
+            step += 1
+            if self.ckpt is not None and step % self.ckpt_every == 0:
+                self._save_periodic(step, state)
         if self.ckpt is not None:
-            with obs.span("train/checkpoint_final", step=start + num_steps):
-                self.ckpt.wait()
-                self.ckpt.save(start + num_steps, state,
-                               extra={"step": start + num_steps,
-                                      "data_state": self.data.state()})
-            obs.event("checkpoint", step=start + num_steps, mode="final")
+            with obs.span("train/checkpoint_final", step=end):
+                self._wait_ckpt()
+                self._retry(lambda: self.ckpt.save(end, state,
+                                                   extra=self._extra(end)),
+                            label="ckpt_save")
+            obs.event("checkpoint", step=end, mode="final")
         report.steps = num_steps
         report.epoch_log = self.epoch_log
         obs.event("train_end", steps=num_steps, stragglers=report.stragglers,
+                  rollbacks=report.rollbacks,
+                  skipped_batches=report.skipped_batches,
                   total_runtime=self.epoch_log.total_runtime)
+        return report
+
+    # ------------------------------------------------------------------
+    def _wait_ckpt(self) -> None:
+        """Drain the async writer; a surfaced background failure must not
+        abort recovery (the event is already emitted at capture time)."""
+        try:
+            self.ckpt.wait()
+        except (TransientFault, OSError):
+            pass
+
+    def _save_periodic(self, step: int, state: TrainState) -> None:
+        with obs.span("train/checkpoint_async", step=step):
+            try:
+                self.ckpt.save_async(step, state, extra=self._extra(step))
+            except (TransientFault, OSError) as e:
+                # either the previous background write failed (surfaced by
+                # save_async's wait) or the snapshot itself did — fall back
+                # to a synchronous retried save so the rollback target
+                # stays fresh
+                obs.event("ckpt_save_error", step=step, error=repr(e))
+                self._retry(lambda: self.ckpt.save(step, state,
+                                                   extra=self._extra(step)),
+                            label="ckpt_save")
+        obs.event("checkpoint", step=step, mode="async")
+
+    def _rollback(self, like: TrainState, start: int, report: TrainerReport,
+                  *, poison: bool) -> Tuple[TrainState, int]:
+        """Restore the last good checkpoint (params, opt, iterator position,
+        partial EpochLog) and truncate the report to match."""
+        with obs.span("train/rollback"):
+            self._wait_ckpt()
+            state, extra = self._retry(
+                lambda: self.ckpt.restore(like, fallback=True),
+                label="ckpt_restore")
+            ckpt_step, data_state, log = unpack_train_extra(extra)
+            if data_state is not None:
+                self.data.restore(data_state)
+            if log is not None:
+                self.epoch_log = log
+            done = max(ckpt_step - start, 0)
+            del report.losses[done:]
+            del report.step_times[done:]
+            self.divergence.reset()
+        obs.metrics.counter("train_rollbacks_total").inc()
+        obs.event("rollback", to_step=ckpt_step, poison_batch=poison)
+        return state, ckpt_step
+
+    def _handle_preemption(self, step: int, start: int, state: TrainState,
+                           pre_fetch_state: Dict[str, int],
+                           report: TrainerReport) -> TrainerReport:
+        """Graceful drain on preemption: emergency checkpoint pointing at
+        the interrupted batch, then hand back a partial report. A fresh
+        Trainer resumes at exactly this batch and the stitched run is
+        indistinguishable from an uninterrupted one."""
+        report.preempted = True
+        report.steps = step - start
+        report.epoch_log = self.epoch_log
+        obs.metrics.counter("train_preemptions_total").inc()
+        if self.ckpt is not None:
+            with obs.span("train/checkpoint_preempt", step=step):
+                self._wait_ckpt()
+                extra = pack_train_extra(step, pre_fetch_state,
+                                         self.epoch_log)
+                self._retry(lambda: self.ckpt.save(step, state, extra=extra),
+                            label="ckpt_save")
+            obs.event("checkpoint", step=step, mode="preempt")
+        obs.event("preempted", step=step, completed=step - start,
+                  can_resume=self.ckpt is not None)
         return report
 
     def seqpoints(self, **kw) -> SeqPointSet:

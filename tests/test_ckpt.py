@@ -71,3 +71,68 @@ def test_no_tmp_left_behind(tmp_path):
     mgr = CheckpointManager(str(tmp_path))
     mgr.save(3, make_state())
     assert not any(n.endswith(".tmp") for n in os.listdir(str(tmp_path)))
+
+
+def _corrupt(tmp_path, step):
+    npz = os.path.join(str(tmp_path), f"step_{step:08d}", "arrays.npz")
+    with open(npz, "r+b") as f:
+        f.seek(100)
+        f.write(b"\x00\x01\x02\x03")
+
+
+def test_corrupt_latest_falls_back_one_step(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, make_state(1), extra={"step": 1})
+    mgr.save(2, make_state(2), extra={"step": 2})
+    _corrupt(tmp_path, 2)
+    restored, extra = mgr.restore(jax.tree.map(jnp.zeros_like, make_state()))
+    assert extra["step"] == 1                   # fell back past the damage
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(a, b),
+                 make_state(1), restored)
+
+
+def test_truncated_latest_falls_back(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, make_state(1), extra={"step": 1})
+    mgr.save(2, make_state(2), extra={"step": 2})
+    npz = os.path.join(str(tmp_path), "step_00000002", "arrays.npz")
+    with open(npz, "r+b") as f:
+        f.truncate(64)                          # killed writer / bad disk
+    _, extra = mgr.restore(make_state())
+    assert extra["step"] == 1
+
+
+def test_explicit_step_is_strict_by_default(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, make_state(1), extra={"step": 1})
+    mgr.save(2, make_state(2), extra={"step": 2})
+    _corrupt(tmp_path, 2)
+    with pytest.raises(IOError):
+        mgr.restore(make_state(), step=2)       # pinned: no silent fallback
+    _, extra = mgr.restore(make_state(), step=2, fallback=True)
+    assert extra["step"] == 1
+
+
+def test_verify_step(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, make_state(1))
+    assert mgr.verify_step(1)
+    _corrupt(tmp_path, 1)
+    assert not mgr.verify_step(1)
+    assert not mgr.verify_step(99)              # missing step is not valid
+
+
+def test_async_write_failure_surfaces_at_next_save(tmp_path, monkeypatch):
+    mgr = CheckpointManager(str(tmp_path))
+    state = make_state()
+
+    def boom(step, flat, extra):
+        raise IOError("disk on fire")
+
+    monkeypatch.setattr(mgr, "_write", boom)
+    mgr.save_async(1, state)                    # background failure...
+    monkeypatch.undo()
+    with pytest.raises(IOError, match="disk on fire"):
+        mgr.save(2, state)                      # ...surfaces here
+    mgr.save(2, state)                          # error is consumed; works
+    assert mgr.latest_step() == 2

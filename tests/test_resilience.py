@@ -1,0 +1,411 @@
+"""repro.resilience: fault plans, guards, retries, and trainer chaos paths
+(rollback on NaN, preemption + resume parity, corrupt-checkpoint fallback,
+serve deadlines/shedding)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import (
+    MeshConfig,
+    OptimizerConfig,
+    RunConfig,
+    ShapeConfig,
+    StepKind,
+    smoke_config,
+)
+from repro.data.batching import DataIterator
+from repro.data.synthetic import IWSLT_LIKE
+from repro.models import Runtime, build_model
+from repro.resilience import (
+    BatchSkipList,
+    DivergenceDetector,
+    DivergenceError,
+    FaultPlan,
+    FaultSpec,
+    NonFiniteLossError,
+    PreemptionFault,
+    RecoveryPolicy,
+    StepTimeWatchdog,
+    TransientFault,
+    check_finite,
+    faults,
+    retry_with_backoff,
+)
+from repro.train.trainer import Trainer
+
+
+@pytest.fixture(autouse=True)
+def _no_global_faults():
+    """Each test owns the global plan; none leaks to the next test."""
+    prev = faults.install(None)
+    yield
+    faults.install(prev)
+
+
+# -------------------------------------------------------------------------
+# fault plans
+
+
+def test_fault_spec_parsing():
+    s = FaultSpec.parse("nan_loss@5:times=2")
+    assert (s.point, s.step, s.times) == ("nan_loss", 5, 2)
+    s = FaultSpec.parse("decode%0.25:times=3")
+    assert (s.point, s.step, s.prob, s.times) == ("decode", None, 0.25, 3)
+    s = FaultSpec.parse("straggler@3:delay=0.5")
+    assert s.delay == 0.5
+    with pytest.raises(ValueError):
+        FaultSpec.parse("x@1:bogus=1")
+
+
+def test_fault_plan_step_pinned_fires_once():
+    plan = FaultPlan.parse("data_fetch@3")
+    assert plan.check("data_fetch", 2) is None
+    assert plan.check("data_fetch", 3) is not None
+    assert plan.check("data_fetch", 3) is None       # times budget consumed
+    assert plan.check("other_point", 3) is None
+
+
+def test_fault_plan_probabilistic_is_deterministic():
+    fires_a = [bool(FaultPlan.parse("decode%0.5:times=0").check("decode", i))
+               for i in range(64)]
+    fires_b = [bool(FaultPlan.parse("decode%0.5:times=0").check("decode", i))
+               for i in range(64)]
+    assert fires_a == fires_b                        # same seed -> same plan
+    assert 8 < sum(fires_a) < 56                     # and it actually rolls
+    fires_c = [bool(FaultPlan.parse("decode%0.5:times=0", seed=1)
+                    .check("decode", i)) for i in range(64)]
+    assert fires_a != fires_c                        # seed changes the draw
+
+
+def test_fire_corrupt_delay_helpers():
+    faults.install(FaultPlan.parse(
+        "preempt@1,data_fetch@2,nan_loss@3,straggler@4:delay=0.75"))
+    faults.fire("preempt", 0)                        # no-op off-schedule
+    with pytest.raises(PreemptionFault):
+        faults.fire("preempt", 1)
+    with pytest.raises(TransientFault):
+        faults.fire("data_fetch", 2)
+    assert faults.corrupt("nan_loss", 2, 1.5) == 1.5
+    assert np.isnan(faults.corrupt("nan_loss", 3, 1.5))
+    assert faults.delay("straggler", 4) == 0.75
+    assert faults.delay("straggler", 5) == 0.0
+
+
+# -------------------------------------------------------------------------
+# guards
+
+
+def test_check_finite():
+    assert check_finite(1.25) == 1.25
+    with pytest.raises(NonFiniteLossError):
+        check_finite(float("nan"), step=7)
+    with pytest.raises(NonFiniteLossError):
+        check_finite(float("inf"), name="grad_norm")
+
+
+def test_divergence_detector_trips_on_sustained_spike():
+    det = DivergenceDetector(ratio=3.0, patience=3, warmup=4)
+    for i in range(10):
+        det.update(1.0)
+    det.update(10.0)
+    det.update(10.0)
+    with pytest.raises(DivergenceError):
+        det.update(10.0)
+    det.reset()
+    det.update(10.0)                                 # fresh baseline, fine
+
+
+def test_divergence_detector_tolerates_single_spike():
+    det = DivergenceDetector(ratio=3.0, patience=3, warmup=4)
+    for i in range(10):
+        det.update(1.0)
+    det.update(10.0)                                 # one bad step
+    for i in range(10):
+        det.update(1.0)                              # streak resets
+    det.update(10.0)
+    det.update(1.0)
+
+
+def test_watchdog_per_sl_baseline_and_fallback():
+    wd = StepTimeWatchdog(factor=3.0)
+    assert wd.observe(64, 0.1).baseline is None      # cold start
+    v = wd.observe(64, 0.1)
+    assert v.baseline == pytest.approx(0.1) and not v.is_straggler
+    assert wd.observe(64, 0.5).is_straggler          # 5x the SL-64 median
+    # unseen SL falls back to the all-SL median
+    v = wd.observe(128, 0.2)
+    assert v.baseline is not None and not v.is_straggler
+
+
+# -------------------------------------------------------------------------
+# recovery primitives
+
+
+def test_retry_with_backoff_succeeds_then_gives_up():
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise TransientFault("x", calls["n"])
+        return "ok"
+
+    assert retry_with_backoff(flaky, retries=3, base_delay=0.0) == "ok"
+    assert calls["n"] == 3
+
+    with pytest.raises(TransientFault):
+        retry_with_backoff(lambda: (_ for _ in ()).throw(
+            TransientFault("y", 0)), retries=2, base_delay=0.0)
+
+    # preemption is not retryable
+    def preempts():
+        raise PreemptionFault("preempt", 0)
+
+    with pytest.raises(PreemptionFault):
+        retry_with_backoff(preempts, retries=5, base_delay=0.0)
+
+
+def test_batch_skip_list():
+    sl = BatchSkipList(skip_after=2)
+    key = (0, 7)
+    assert not sl.record_failure(key)
+    assert not sl.should_skip(key)
+    assert sl.record_failure(key)                    # second strike: poison
+    assert sl.should_skip(key) and not sl.should_skip((0, 8))
+
+
+# -------------------------------------------------------------------------
+# trainer chaos paths
+
+
+def _tiny_run():
+    cfg = smoke_config("starcoder2-3b").with_overrides(num_layers=2,
+                                                       d_model=64, d_ff=128,
+                                                       vocab_size=256)
+    shape = ShapeConfig("tiny", seq_len=32, global_batch=8,
+                        step=StepKind.TRAIN)
+    mesh = MeshConfig(shape=(1,), axes=("data",))
+    run = RunConfig(model=cfg, shape=shape, mesh=mesh,
+                    optimizer=OptimizerConfig(lr=1e-3, warmup_steps=2),
+                    param_dtype="float32", compute_dtype="float32")
+    return cfg, run
+
+
+class FakeClock:
+    """Deterministic timer: one tick per call, so every measured step takes
+    exactly 1.0 'seconds' and runtimes are bit-identical across runs."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        self.t += 1.0
+        return self.t
+
+
+def _make_trainer(tmp_path, *, ckpt_every=4, total=16, timer=None,
+                  policy=None):
+    cfg, run = _tiny_run()
+    model = build_model(cfg, Runtime.from_run(run))
+    data = DataIterator(IWSLT_LIKE, samples_per_epoch=256, batch_size=8,
+                        vocab_size=cfg.vocab_size, granularity=8, seed=1)
+    kw = {"timer": timer} if timer is not None else {}
+    return Trainer(model, run, data, ckpt_dir=str(tmp_path),
+                   ckpt_every=ckpt_every, total_steps=total,
+                   policy=policy or RecoveryPolicy(backoff_base_s=0.0),
+                   **kw)
+
+
+def test_nan_loss_triggers_rollback_and_training_converges(tmp_path):
+    faults.install(FaultPlan.parse("nan_loss@5"))
+    tr = _make_trainer(tmp_path / "ck")
+    rep = tr.train(12)
+    assert rep.rollbacks == 1 and rep.guard_violations == 1
+    assert rep.steps == 12 and len(rep.losses) == 12
+    assert all(np.isfinite(rep.losses))              # poisoned step replayed
+    assert np.mean(rep.losses[:4]) > np.mean(rep.losses[-4:])
+    assert tr.epoch_log.num_iterations == 12
+
+
+def test_persistent_nan_skips_poison_batch(tmp_path):
+    # the same step NaNs twice: second rollback declares the batch poison
+    # and training routes around it
+    faults.install(FaultPlan.parse("nan_loss@5:times=2"))
+    tr = _make_trainer(tmp_path / "ck")
+    rep = tr.train(10)
+    assert rep.rollbacks == 2
+    assert rep.skipped_batches == 1
+    assert rep.steps == 10 and len(rep.losses) == 10
+    assert all(np.isfinite(rep.losses))
+
+
+def test_guard_violation_without_ckpt_raises():
+    cfg, run = _tiny_run()
+    model = build_model(cfg, Runtime.from_run(run))
+    data = DataIterator(IWSLT_LIKE, samples_per_epoch=256, batch_size=8,
+                        vocab_size=cfg.vocab_size, granularity=8, seed=1)
+    faults.install(FaultPlan.parse("nan_loss@2"))
+    tr = Trainer(model, run, data)                   # no ckpt_dir: no net
+    with pytest.raises(NonFiniteLossError):
+        tr.train(5)
+
+
+def test_data_fetch_fault_is_retried_transparently(tmp_path):
+    faults.install(FaultPlan.parse("data_fetch@3"))
+    tr = _make_trainer(tmp_path / "ck")
+    rep = tr.train(8)
+    assert rep.steps == 8 and len(rep.losses) == 8
+    assert rep.rollbacks == 0                        # retry, not rollback
+
+
+def test_preemption_resume_matches_fault_free_run_bitwise(tmp_path):
+    steps = 12
+    # fault-free reference with the deterministic clock
+    ref = _make_trainer(tmp_path / "ref", timer=FakeClock())
+    ref_rep = ref.train(steps)
+    ref_sp = ref.seqpoints(error_threshold=0.1, n_threshold=32)
+
+    # chaos run: transient loader fault, one NaN rollback, preemption at 9
+    # with the emergency checkpoint silently corrupted, forcing restore to
+    # fall back one step — the full acceptance gauntlet
+    faults.install(FaultPlan.parse(
+        "data_fetch@2,nan_loss@5,preempt@9,ckpt_corrupt@9"))
+    ck = tmp_path / "ck"
+    tr = _make_trainer(ck, timer=FakeClock())
+    rep = tr.train(steps)
+    assert rep.preempted and rep.steps == 9
+    losses = list(rep.losses)
+    pos = rep.steps
+    resume_points = []
+    for _ in range(4):                               # resume until complete
+        if not rep.preempted and pos >= steps:
+            break
+        tr = _make_trainer(ck, timer=FakeClock())
+        rep = tr.train(steps - pos)
+        start = rep.resumed_from or 0
+        resume_points.append(start)
+        losses = losses[:start] + list(rep.losses)
+        pos = start + rep.steps
+    assert pos == steps
+
+    # the corrupted emergency checkpoint (step 9) forced the first resume to
+    # fall back to the step-8 periodic checkpoint
+    assert resume_points[0] == 8
+    np.testing.assert_allclose(losses, ref_rep.losses, rtol=1e-5, atol=1e-6)
+    # EpochLog parity is bit-for-bit: same SLs, same (fake-clock) runtimes,
+    # same wire-byte stats
+    assert tr.epoch_log.to_jsonable() == ref.epoch_log.to_jsonable()
+    sp = tr.seqpoints(error_threshold=0.1, n_threshold=32)
+    assert sp.seq_lens == ref_sp.seq_lens
+    np.testing.assert_array_equal(sp.weights, ref_sp.weights)
+    assert (sp.k, sp.predicted, sp.actual) == \
+        (ref_sp.k, ref_sp.predicted, ref_sp.actual)
+
+
+def test_straggler_injection_is_flagged(tmp_path):
+    faults.install(FaultPlan.parse("straggler@5:delay=1000"))
+    tr = _make_trainer(tmp_path / "ck", timer=FakeClock())
+    rep = tr.train(8)
+    # fake clock: every step is 1.0s, the injected one 1001.0s
+    assert rep.stragglers == 1
+    assert rep.step_times[5] == pytest.approx(1001.0)
+
+
+def test_divergence_guard_rolls_back_in_trainer(tmp_path):
+    tr = _make_trainer(tmp_path / "ck")
+    # hair-trigger detector fed a scripted loss spike at step 6
+    tr.divergence = DivergenceDetector(ratio=1.5, patience=2, warmup=2)
+    real_update = tr.divergence.update
+    spiked = {"done": False}
+
+    def scripted_update(loss, step=None):
+        if step == 6 and not spiked["done"]:
+            spiked["done"] = True
+            real_update(loss * 100.0, step=step)
+            real_update(loss * 100.0, step=step)
+            return
+        real_update(loss, step=step)
+
+    tr.divergence.update = scripted_update
+    rep = tr.train(10)
+    assert rep.rollbacks >= 1
+    assert rep.steps == 10
+
+
+# -------------------------------------------------------------------------
+# serve chaos paths
+
+
+def _engine(**kw):
+    cfg, run = _tiny_run()
+    model = build_model(cfg, Runtime.from_run(run))
+    params = model.init(jax.random.PRNGKey(0))
+    from repro.serve.engine import ServeEngine
+    return ServeEngine(model, params, batch_size=2, max_len=64,
+                       sl_granularity=16, **kw)
+
+
+def test_serve_tokens_out_counts_emitted_real_tokens():
+    from repro.serve.engine import Request
+
+    eng = _engine()
+    reqs = [Request(prompt=np.arange(1, 9, dtype=np.int32),
+                    max_new_tokens=5)]
+    eng.run_batch(reqs)
+    rec = eng.log.iterations[-1]
+    # one real request, five tokens emitted — the padded dummy slot and the
+    # requested-vs-emitted distinction must not inflate the count
+    assert rec.stats["tokens_out"] == 5.0
+    assert rec.stats["tokens_out"] == float(len(reqs[0].output))
+
+
+def test_serve_sheds_overload_instead_of_crashing():
+    from repro.serve.engine import Request
+
+    eng = _engine()
+    reqs = [Request(prompt=np.arange(1, 9, dtype=np.int32),
+                    max_new_tokens=2) for _ in range(4)]
+    out = eng.run_batch(reqs)
+    assert out is reqs
+    assert [r.shed for r in reqs] == [False, False, True, True]
+    assert all(len(r.output) == 2 for r in reqs[:2])
+    assert all(len(r.output) == 0 for r in reqs[2:])
+
+
+def test_serve_deadline_curtails_decode():
+    from repro.serve.engine import Request
+
+    eng = _engine(deadline_s=0.0)                    # budget gone at once
+    reqs = [Request(prompt=np.arange(1, 9, dtype=np.int32),
+                    max_new_tokens=8)]
+    eng.run_batch(reqs)
+    # prefill's token is delivered; the deadline stops all decode calls
+    assert len(reqs[0].output) == 1
+    rec = eng.log.iterations[-1]
+    assert rec.stats["decode_steps"] == 0.0
+    assert rec.stats["tokens_out"] == 1.0
+
+
+def test_serve_decode_fault_is_retried():
+    from repro.serve.engine import Request
+
+    faults.install(FaultPlan.parse("decode@1"))
+    eng = _engine(policy=RecoveryPolicy(backoff_base_s=0.0))
+    reqs = [Request(prompt=np.arange(1, 9, dtype=np.int32),
+                    max_new_tokens=4)]
+    eng.run_batch(reqs)
+    assert len(reqs[0].output) == 4                  # fault was invisible
+
+
+# -------------------------------------------------------------------------
+# env wiring
+
+
+def test_env_spec_round_trip():
+    plan = FaultPlan.parse(os.environ.get("X_UNSET", "") or
+                           "nan_loss@5,preempt@9", seed=3)
+    assert [s.point for s in plan.specs] == ["nan_loss", "preempt"]
+    assert plan.seed == 3
