@@ -70,22 +70,26 @@ _PROJ_FILES = (("16x16", "dryrun_compile_single.jsonl"),
 
 def projection_summary(fast: bool) -> float:
     """One row per cell: analytic-vs-measured collective bytes relative
-    error (obs.projection). Returns the max error seen; the CLI entrypoint
-    below turns a bound violation into a non-zero exit."""
+    error (obs.projection). Returns the max *claimed-kind* error seen (the
+    all-reduce residual the analytic model is accountable for; unclaimed
+    ZeRO gathers and permutes stay visible in rel_error); the CLI
+    entrypoint below turns a bound violation into a non-zero exit."""
     max_err = 0.0
     for tag, fname in _PROJ_FILES:
         for r in _read(fname):
             proj = r.get("projection")
             if r["status"] != "ok" or proj is None:
                 continue
-            err = float(proj["rel_error"])
+            err = float(proj.get("rel_error_claimed", proj["rel_error"]))
             max_err = max(max_err, err)
             emit(f"projection_{tag}_{r['arch']}_{r['shape']}", 0.0,
                  f"analytic_bytes={proj['analytic_wire_bytes']:.3e} "
                  f"measured_bytes={proj['measured_wire_bytes']:.3e} "
-                 f"rel_error={err:.4f} "
+                 f"rel_error={float(proj['rel_error']):.4f} "
+                 f"rel_error_claimed={err:.4f} "
                  f"rel_error_reduce={proj['rel_error_reduce']:.4f}")
-    emit("projection_max_rel_error", 0.0, f"max_rel_error={max_err:.4f}")
+    emit("projection_max_rel_error", 0.0,
+         f"max_rel_error_claimed={max_err:.4f}")
     return max_err
 
 
@@ -96,9 +100,14 @@ def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--max-rel-error", type=float,
                     default=float(os.environ.get(
-                        "REPRO_PROJECTION_ERROR_BOUND", "inf")),
+                        "REPRO_PROJECTION_ERROR_BOUND", "0.75")),
                     help="fail (exit 1) if any cell's analytic-vs-measured "
-                         "collective-bytes relative error exceeds this")
+                         "all-reduce wire-bytes relative error exceeds this "
+                         "(default 0.75 now that the analytic model knows "
+                         "grad dtype, ZeRO micro-reduces, and the "
+                         "spec-derived DP ring size — dense compile cells "
+                         "sit under 0.4, MoE/roofline under 0.75; override "
+                         "via REPRO_PROJECTION_ERROR_BOUND)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     for fn in (compile_summary, roofline_summary, perf_summary):

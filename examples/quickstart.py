@@ -11,9 +11,10 @@ SL-keyed step-time histograms, and a JSONL event log, and checks the
 SeqPoint projection live against the measured epoch (repro.obs).
 
 With fault injection armed (``REPRO_FAULTS=<plan>`` or ``--chaos``), the run
-finishes with a chaos drill: a short training run under injected faults
-(NaN loss, preemption, corrupt checkpoint, flaky loader) that must recover
-and produce the same SeqPoint selection as a fault-free reference run
+finishes with two chaos drills: a single-process one (NaN loss, preemption,
+corrupt checkpoint, flaky loader) and a multi-host one (a peer lost mid-run
+forces an elastic re-mesh onto the surviving hosts) — both must recover and
+produce the same SeqPoint selection as a fault-free reference run
 (repro.resilience).
 
     PYTHONPATH=src python examples/quickstart.py [--obs-dir results/obs]
@@ -39,6 +40,11 @@ from repro.data.batching import plan_epoch
 # -corruption faults inside a 14-step run checkpointed every 4 steps
 DEFAULT_CHAOS_SPEC = ("data_fetch@2,nan_loss@5,straggler@6:delay=0.05,"
                       "preempt@9,ckpt_corrupt@9")
+
+# multi-host drill: a late heartbeat at step 4, then host 1 of 4 dies at
+# step 7 — the trainer must confirm the loss, shrink the mesh to 3 hosts,
+# and finish with the fault-free SeqPoint selection
+ELASTIC_CHAOS_SPEC = "peer_slow@4:host=2:delay=0.02,peer_loss@7:host=1"
 
 
 def chaos_drill() -> bool:
@@ -118,6 +124,79 @@ def chaos_drill() -> bool:
     return parity
 
 
+def elastic_drill() -> bool:
+    """Lose a host mid-run on a 4-way DP mesh, re-mesh over the survivors,
+    and check SeqPoint parity against a fault-free reference. Returns True
+    on parity."""
+    from repro.configs import (
+        MeshConfig,
+        OptimizerConfig,
+        RunConfig,
+        ShapeConfig,
+        StepKind,
+        smoke_config,
+    )
+    from repro.data.batching import DataIterator
+    from repro.data.synthetic import IWSLT_LIKE
+    from repro.models import Runtime, build_model
+    from repro.resilience import faults
+    from repro.train.trainer import Trainer
+
+    spec = ELASTIC_CHAOS_SPEC
+    seed = int(os.environ.get("REPRO_FAULTS_SEED", "0"))
+    steps = 12
+
+    def make_trainer(ckpt_dir):
+        cfg = smoke_config("starcoder2-3b").with_overrides(
+            num_layers=2, d_model=64, d_ff=128, vocab_size=256)
+        run = RunConfig(
+            model=cfg,
+            shape=ShapeConfig("elastic", seq_len=32, global_batch=8,
+                              step=StepKind.TRAIN),
+            mesh=MeshConfig(shape=(4,), axes=("data",)),
+            optimizer=OptimizerConfig(lr=1e-3, warmup_steps=2),
+            param_dtype="float32", compute_dtype="float32")
+        data = DataIterator(IWSLT_LIKE, samples_per_epoch=256, batch_size=8,
+                            vocab_size=cfg.vocab_size, granularity=8, seed=1)
+        model = build_model(cfg, Runtime.from_run(run))
+        return Trainer(model, run, data, ckpt_dir=ckpt_dir, ckpt_every=4,
+                       total_steps=steps + 2)
+
+    obs.event("elastic_drill_start", spec=spec, seed=seed, steps=steps)
+    print(f"\nelastic drill: {steps} steps on a 4-host DP mesh under "
+          f"{spec!r}")
+    faults.install(None)                      # fault-free reference first
+    with tempfile.TemporaryDirectory() as d:
+        ref_tr = make_trainer(os.path.join(d, "ck"))
+        ref_rep = ref_tr.train(steps)
+        ref_sp = ref_tr.seqpoints(error_threshold=0.1, n_threshold=32)
+
+    faults.install(faults.FaultPlan.parse(spec, seed=seed))
+    with tempfile.TemporaryDirectory() as d:
+        tr = make_trainer(os.path.join(d, "ck"))
+        rep = tr.train(steps)                 # re-mesh happens in-call
+        sp = tr.seqpoints(error_threshold=0.1, n_threshold=32)
+    faults.install(None)
+
+    # parity is on losses and the SeqPoint selection — (SL, runtime) records
+    # are what selection reads; dp_wire_bytes legitimately shrinks with DP
+    parity = (rep.remeshes == 1
+              and tr.run.mesh.shape == (3,)
+              and sp.seq_lens == ref_sp.seq_lens
+              and np.allclose(sp.weights, ref_sp.weights)
+              and np.allclose(rep.losses, ref_rep.losses,
+                              rtol=1e-5, atol=1e-6))
+    print(f"  lost host(s) {rep.lost_hosts}: {rep.remeshes} re-mesh(es), "
+          f"mesh {(4,)} -> {tr.run.mesh.shape}, epoch log "
+          f"{tr.epoch_log.num_iterations} iterations")
+    print(f"  seqpoint parity vs fault-free run: "
+          f"{'OK' if parity else 'MISMATCH'} "
+          f"(SLs {sp.seq_lens} == {ref_sp.seq_lens})")
+    obs.event("elastic_drill_end", ok=bool(parity), remeshes=rep.remeshes,
+              lost_hosts=list(rep.lost_hosts), seqpoint_sls=sp.seq_lens)
+    return parity
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--obs-dir", default=os.environ.get("REPRO_OBS_DIR"),
@@ -175,7 +254,9 @@ def main() -> None:
               measured=rep.measured_total, rel_error=rep.rel_error)
 
     if args.chaos:
-        if not chaos_drill():
+        ok = chaos_drill()
+        ok = elastic_drill() and ok
+        if not ok:
             obs.event("run_end", example="quickstart", ok=False)
             if args.obs_dir:
                 obs.export_all()

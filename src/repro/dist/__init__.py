@@ -19,11 +19,13 @@ from repro.dist.compression import (
     dp_grad_wire_bytes,
     init_residual,
     uses_error_feedback,
+    wire_bytes_per_elem,
 )
 from repro.dist.sharding import (
     FSDP_MIN_BYTES,
     batch_specs,
     cache_specs,
+    dp_grad_reduce_elems,
     param_specs,
     tp_activation_wire_bytes,
 )
@@ -42,9 +44,11 @@ __all__ = [
     "dp_grad_wire_bytes",
     "init_residual",
     "uses_error_feedback",
+    "wire_bytes_per_elem",
     "FSDP_MIN_BYTES",
     "batch_specs",
     "cache_specs",
     "param_specs",
+    "dp_grad_reduce_elems",
     "tp_activation_wire_bytes",
 ]

@@ -42,6 +42,17 @@ WIRE_BYTES_PER_ELEM = {
 }
 
 
+def wire_bytes_per_elem(method: str, grad_dtype_bytes: float = 4.0) -> float:
+    """Per-element wire width for ``method``, given the *native* gradient
+    dtype width. Only "none" ships the native dtype (bf16 grads -> 2 bytes
+    uncompressed); the other methods fix their own wire format regardless
+    of what the gradients started as."""
+    _check(method)
+    if method == "none":
+        return float(grad_dtype_bytes)
+    return WIRE_BYTES_PER_ELEM[method]
+
+
 def uses_error_feedback(method: str) -> bool:
     return method.endswith("_ef")
 
@@ -135,13 +146,24 @@ def init_residual(params: Params, method: str) -> Optional[Params]:
 # wire accounting (surfaced into EpochLog.stats by the trainer)
 
 
-def dp_grad_wire_bytes(params: Params, method: str, dp_degree: int) -> float:
-    """Per-step on-the-wire bytes of the DP gradient all-reduce under
+def dp_grad_wire_bytes(params: Params, method: str, dp_degree: int, *,
+                       grad_dtype_bytes: float = 4.0,
+                       micro_reduces: int = 1) -> float:
+    """Per-step on-the-wire bytes of the DP gradient reduction under
     ``method`` compression on a ``dp_degree``-way ring (2*(n-1)/n per
-    buffer byte). 0 when there is no data parallelism."""
+    buffer byte). 0 when there is no data parallelism.
+
+    ``grad_dtype_bytes`` is the native gradient width (2 for bf16 grads);
+    it only matters for method "none" — see ``wire_bytes_per_elem``.
+    ``micro_reduces`` is how many parameter-sized reductions one optimizer
+    step issues: 1 for plain DP (grads accumulate locally, one all-reduce),
+    ``run.microbatches`` under ZeRO-3, whose per-microbatch reduce-scatter
+    cannot be deferred because no device holds the full gradient.
+    """
     _check(method)
     if dp_degree <= 1:
         return 0.0
     n_elem = sum(int(l.size) for l in jax.tree.leaves(params))
-    buf = n_elem * WIRE_BYTES_PER_ELEM[method]
-    return float(2.0 * (dp_degree - 1) / dp_degree * buf)
+    buf = n_elem * wire_bytes_per_elem(method, grad_dtype_bytes)
+    reduces = max(1, int(micro_reduces))
+    return float(2.0 * (dp_degree - 1) / dp_degree * buf * reduces)

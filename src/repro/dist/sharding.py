@@ -291,3 +291,35 @@ def tp_activation_wire_bytes(cfg: ModelConfig, global_batch: int,
     if training:
         total *= 2.0
     return float(total)
+
+
+def dp_grad_reduce_elems(params: Params, specs: Params,
+                         mesh: MeshConfig) -> float:
+    """Per-device gradient elements participating in the DP reduction.
+
+    The DP gradient reduce spans the data axes, so each device's buffer is
+    its leaf shard over the *non-data* mesh axes only: a TP-sharded kernel
+    contributes ``size/tp``, a replicated leaf (most attention-free mixers)
+    contributes its full size. This is the exact quantity the analytic
+    ``dp_grad`` wire term should price per device — ``param_count`` alone
+    cannot distinguish the two cases, which differ by the whole model
+    degree.
+    """
+    extent = dict(zip(mesh.axes, mesh.shape))
+    data_axes = {"pod", "data"}
+    total = 0.0
+    spec_leaves = jax.tree.leaves(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    for leaf, spec in zip(jax.tree.leaves(params), spec_leaves):
+        shards = 1
+        for entry in spec:
+            names = () if entry is None else (
+                (entry,) if isinstance(entry, str) else tuple(entry))
+            for name in names:
+                if name not in data_axes:
+                    shards *= extent.get(name, 1)
+        size = 1
+        for dim in leaf.shape:
+            size *= int(dim)
+        total += size / max(shards, 1)
+    return float(total)

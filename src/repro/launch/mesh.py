@@ -23,6 +23,22 @@ def make_mesh(cfg: MeshConfig, devices: Optional[Sequence] = None) -> jax.shardi
     return jax.sharding.Mesh(dev_grid, cfg.axes)
 
 
+def try_make_mesh(cfg: MeshConfig,
+                  devices: Optional[Sequence] = None
+                  ) -> Optional[jax.sharding.Mesh]:
+    """``make_mesh`` that returns ``None`` instead of raising when this
+    process does not own enough devices.
+
+    The elastic re-mesh path (``resilience.elastic``) uses this to rebuild
+    the mesh over surviving devices where possible and to fall back to
+    host placement in single-device simulation runs.
+    """
+    devices = list(devices if devices is not None else jax.devices())
+    if len(devices) < cfg.num_devices:
+        return None
+    return make_mesh(cfg, devices)
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     """(16, 16) = (data, model) single pod; (2, 16, 16) = (pod, data, model)
     across two pods. 256 chips/pod (TPU v5e-256 topology)."""

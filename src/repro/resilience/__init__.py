@@ -2,13 +2,23 @@
 crash-consistent recovery.
 
 ``faults`` is the deterministic chaos switchboard (env-driven via
-``REPRO_FAULTS``), ``guards`` are the training-health invariants, and
+``REPRO_FAULTS``), ``guards`` are the training-health invariants,
 ``recovery`` holds retries, skip lists, and the crash-consistency contract
-for checkpoint extras. See ``src/repro/resilience/README.md``.
+for checkpoint extras, and ``elastic`` models multi-host failure domains
+(peer-loss detection, elastic re-meshing, serve replica health). See
+``src/repro/resilience/README.md``.
 """
 from __future__ import annotations
 
-from repro.resilience import faults
+from repro.resilience import elastic, faults
+from repro.resilience.elastic import (
+    ClusterFailure,
+    ClusterMonitor,
+    FailureDomains,
+    PeerHealthTracker,
+    PeerLossFault,
+    ReplicaSet,
+)
 from repro.resilience.faults import (
     FaultError,
     FaultPlan,
@@ -29,15 +39,18 @@ from repro.resilience.recovery import (
     RETRYABLE,
     BatchSkipList,
     RecoveryPolicy,
+    backoff_delay,
     pack_train_extra,
     retry_with_backoff,
     unpack_train_extra,
 )
 
 __all__ = [
-    "RETRYABLE", "BatchSkipList", "DivergenceDetector", "DivergenceError",
-    "FaultError", "FaultPlan", "FaultSpec", "GuardViolation",
-    "NonFiniteLossError", "PreemptionFault", "RecoveryPolicy",
-    "StepTimeWatchdog", "TransientFault", "WatchdogVerdict", "check_finite",
-    "faults", "pack_train_extra", "retry_with_backoff", "unpack_train_extra",
+    "RETRYABLE", "BatchSkipList", "ClusterFailure", "ClusterMonitor",
+    "DivergenceDetector", "DivergenceError", "FailureDomains", "FaultError",
+    "FaultPlan", "FaultSpec", "GuardViolation", "NonFiniteLossError",
+    "PeerHealthTracker", "PeerLossFault", "PreemptionFault", "RecoveryPolicy",
+    "ReplicaSet", "StepTimeWatchdog", "TransientFault", "WatchdogVerdict",
+    "backoff_delay", "check_finite", "elastic", "faults", "pack_train_extra",
+    "retry_with_backoff", "unpack_train_extra",
 ]

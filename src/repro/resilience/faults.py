@@ -18,19 +18,27 @@ Each spec is ``point[@step][%prob][:opt=val]*``:
     point%prob          fire each call with probability ``prob`` (seeded by
                         (seed, point, call index), so replays are identical)
     :times=N            max firings (default 1 for @step, unlimited for %p)
-    :delay=S            magnitude for ``straggler`` (seconds added to dt)
+    :delay=S            magnitude for ``straggler`` / ``peer_slow`` (seconds)
+    :host=H             target host/replica for the multi-host points
 
 Instrumented points (see ``resilience/README.md`` for where each lives):
 
-    data_fetch    transient error from the data iterator (retryable)
-    nan_loss      corrupts the step loss to NaN (guard -> rollback)
-    ckpt_save     transient I/O failure inside the checkpoint writer
-    ckpt_restore  transient I/O failure at checkpoint load
-    ckpt_corrupt  silently flips bytes in arrays.npz *after* the sha256 is
-                  recorded (media corruption; caught at restore-verify)
-    preempt       simulated preemption mid-step (PreemptionFault)
-    straggler     artificial slowdown added to the measured step time
-    decode        transient failure of one serve decode call (retryable)
+    data_fetch      transient error from the data iterator (retryable)
+    nan_loss        corrupts the step loss to NaN (guard -> rollback)
+    ckpt_save       transient I/O failure inside the checkpoint writer
+    ckpt_restore    transient I/O failure at checkpoint load
+    ckpt_corrupt    silently flips bytes in arrays.npz *after* the sha256 is
+                    recorded (media corruption; caught at restore-verify)
+    preempt         simulated preemption mid-step (PreemptionFault)
+    straggler       artificial slowdown added to the measured step time
+    decode          transient failure of one serve decode call (retryable)
+    peer_loss       host ``:host=H`` stops heartbeating permanently
+                    (ClusterMonitor confirms the loss -> elastic re-mesh)
+    peer_slow       host/replica ``:host=H`` runs ``:delay=S`` late: a missed
+                    heartbeat in the trainer, a per-decode-call slowdown in
+                    the serve engine (hedging re-issues the batch)
+    mesh_partition  hosts >= ``:host=H`` become unreachable from host 0's
+                    side of the partition (all confirmed lost together)
 
 When no plan is installed every hook is a single ``is None`` check, so the
 instrumented hot paths cost nothing in production.
@@ -71,7 +79,8 @@ class FaultSpec:
     step: Optional[int] = None      # fire at this step/call index
     prob: float = 0.0               # else: per-call probability
     times: int = 1                  # max firings; <= 0 means unlimited
-    delay: float = 0.05             # straggler magnitude (seconds)
+    delay: float = 0.05             # straggler/peer_slow magnitude (seconds)
+    host: int = 0                   # target host/replica for peer points
 
     @classmethod
     def parse(cls, text: str) -> "FaultSpec":
@@ -95,6 +104,8 @@ class FaultSpec:
                 times = int(v)
             elif k == "delay":
                 kw["delay"] = float(v)
+            elif k == "host":
+                kw["host"] = int(v)
             else:
                 raise ValueError(f"unknown fault option {k!r} in {text!r}")
         return cls(point=point, step=step, prob=prob, times=times, **kw)

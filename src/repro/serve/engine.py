@@ -4,15 +4,27 @@ counterpart).
 
 SeqPoint's insight applies at serving too (paper §VII-E): per-request
 prefill cost is keyed by prompt SL, so the engine logs (SL, prefill
-latency) — with decode time, decode-call count, and emitted-token stats on
-the same record — and ``seqpoints()`` summarizes a serving trace the same
-way training epochs are summarized.
+latency) — with decode time, decode-call count, emitted-token and batch
+latency stats on the same record — and ``seqpoints()`` summarizes a serving
+trace the same way training epochs are summarized.
+
+Request hedging (tail-latency defense): with ``n_replicas > 1`` the engine
+tracks a per-SL running median of past batch latencies
+(``StepTimeWatchdog``); when an in-flight batch runs ``hedge_factor``× past
+that baseline — detected between decode steps — it is speculatively
+re-issued on the next-healthiest simulated replica. First (virtual)
+finisher wins; the loser's tokens are discarded, never reaching the caller
+or the ``tokens_out`` counter, and the slow replica takes a health strike.
+Slowness is injected via the ``peer_slow`` fault point as a *virtual*
+per-decode-call penalty keyed by a per-execution index, so the hedge
+re-execution (a different index) never inherits the primary's injected
+delay and chaos replays stay deterministic.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -23,6 +35,8 @@ from repro.core.profile import EpochLog
 from repro.core.seqpoint import SeqPointSet, select_seqpoints
 from repro.models.model_zoo import Model
 from repro.resilience import faults
+from repro.resilience.elastic import ReplicaSet
+from repro.resilience.guards import StepTimeWatchdog
 from repro.resilience.recovery import RecoveryPolicy, retry_with_backoff
 
 
@@ -38,6 +52,7 @@ class ServeEngine:
     def __init__(self, model: Model, params, *, batch_size: int = 4,
                  max_len: int = 512, sl_granularity: int = 32,
                  deadline_s: Optional[float] = None,
+                 n_replicas: int = 1, hedge_factor: float = 3.0,
                  policy: Optional[RecoveryPolicy] = None):
         self.model = model
         self.params = params
@@ -45,15 +60,126 @@ class ServeEngine:
         self.max_len = max_len
         self.gran = sl_granularity
         self.deadline_s = deadline_s
+        self.hedge_factor = hedge_factor
         self.policy = policy or RecoveryPolicy()
+        self.replicas = ReplicaSet(n_replicas)
+        # per-SL running median of past batch latencies: the hedge baseline
+        self.latency_watchdog = StepTimeWatchdog(factor=hedge_factor)
         self._prefill = jax.jit(model.prefill)
         self._decode = jax.jit(model.decode_step, donate_argnums=1)
         self._decode_calls = 0
+        self._exec_index = 0          # one per batch execution (hedges too)
         self.log = EpochLog(meta={"kind": "serve"})
 
     def _pad(self, sl: int) -> int:
         return min(self.max_len, -(-sl // self.gran) * self.gran)
 
+    # ------------------------------------------------------------------
+    def _execute(self, batch: List[Request], n_admitted: int,
+                 toks: np.ndarray, sl: int, batch_t0: float,
+                 hedge_cutoff_s: Optional[float]) -> Dict:
+        """Run one prefill+decode execution of the batch on one replica.
+
+        Never mutates the ``Request`` objects: generated tokens go into
+        local per-row lists and the caller commits only the winning
+        execution's outputs. Returns prefill/decode timings, the emitted
+        count, the *virtual* batch latency (real elapsed plus any injected
+        ``peer_slow`` per-decode-call penalty), and ``hedge_at`` — the
+        virtual elapsed time at which the batch crossed ``hedge_cutoff_s``
+        (None when it never did or no cutoff was armed).
+
+        The real deadline clock (``batch_t0``) is shared across hedged
+        executions: a hedge spends the same SLO budget the primary already
+        burned. Injected slowness is virtual and does not consume it.
+        """
+        mreg = obs.metrics
+        exec_index = self._exec_index
+        self._exec_index += 1
+        # a peer_slow spec firing at this execution degrades every decode
+        # call of this execution (slow link), consuming the spec's budget so
+        # a hedge re-execution at the next index runs at full speed
+        spec = faults.check("peer_slow", exec_index)
+        penalty_per_call = float(spec.delay) if spec is not None else 0.0
+        penalty = 0.0
+        hedge_at: Optional[float] = None
+        exec_t0 = time.perf_counter()
+        with obs.span("serve/prefill", sl=sl, batch=n_admitted):
+            logits, caches = self._prefill(self.params,
+                                           {"tokens": jnp.asarray(toks)})
+            jax.block_until_ready(logits)
+        prefill_dt = time.perf_counter() - exec_t0
+        mreg.histogram("serve_prefill_s", sl=sl).observe(prefill_dt)
+
+        # decode greedily; caches from prefill hold exactly sl entries, so
+        # rebuild into the fixed-size serving cache
+        full = self.model.init_cache(self.batch_size, self.max_len)
+        full = jax.tree.map(
+            lambda dst, src: jax.lax.dynamic_update_slice_in_dim(
+                dst, src.astype(dst.dtype), 0, axis=2)
+            if dst.ndim >= 3 and dst.shape[:2] == src.shape[:2]
+            and dst.shape[3:] == src.shape[3:] else src.astype(dst.dtype),
+            full, caches)
+        token = jnp.argmax(logits[:, -1] if logits.ndim == 3 else logits,
+                           axis=-1).astype(jnp.int32)[:, None]
+        n_steps = max((r.max_new_tokens for r in batch), default=0)
+        dec_t0 = time.perf_counter()
+        outputs: List[List[int]] = [[] for _ in batch]
+        emitted = 0                       # tokens bound for real requests
+        decode_calls = 0
+        for step in range(n_steps):
+            for i, r in enumerate(batch):
+                if step < r.max_new_tokens:
+                    outputs[i].append(int(token[i, 0]))
+                    if i < n_admitted:
+                        emitted += 1
+            if step + 1 >= n_steps:       # final token came from the last
+                break                     # decode (or prefill) — done
+            if self.deadline_s is not None and \
+                    time.perf_counter() - batch_t0 > self.deadline_s:
+                curtailed = sum(
+                    max(0, r.max_new_tokens - len(outputs[i]))
+                    for i, r in enumerate(batch) if i < n_admitted)
+                mreg.counter("serve_deadline_exceeded_total").inc()
+                obs.event("serve_deadline", sl=sl,
+                          deadline_s=self.deadline_s,
+                          curtailed_tokens=curtailed)
+                break
+            if hedge_at is None and hedge_cutoff_s is not None:
+                virtual = time.perf_counter() - exec_t0 + penalty
+                if virtual > hedge_cutoff_s:
+                    hedge_at = virtual
+            t1 = time.perf_counter()
+            with obs.span("serve/decode_token", pos=sl + step):
+                def decode_once():
+                    faults.fire("decode", self._decode_calls)
+                    return self._decode(self.params, full, token,
+                                        jnp.asarray(sl + step, jnp.int32))
+                logits, full = retry_with_backoff(
+                    decode_once, retries=self.policy.max_retries,
+                    base_delay=self.policy.backoff_base_s,
+                    factor=self.policy.backoff_factor,
+                    max_delay_s=self.policy.max_delay_s,
+                    jitter_frac=self.policy.jitter_frac,
+                    jitter_seed=self.policy.jitter_seed,
+                    label="serve_decode")
+                self._decode_calls += 1
+                decode_calls += 1
+                penalty += penalty_per_call
+                token = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+                jax.block_until_ready(token)
+            mreg.histogram("serve_decode_token_s", sl=sl).observe(
+                time.perf_counter() - t1)
+        decode_dt = time.perf_counter() - dec_t0 if n_steps else 0.0
+        latency = time.perf_counter() - exec_t0 + penalty
+        if hedge_at is None and hedge_cutoff_s is not None \
+                and latency > hedge_cutoff_s:
+            hedge_at = latency            # crossed after the last decode
+        return {"outputs": outputs, "emitted": emitted,
+                "decode_calls": decode_calls, "prefill_dt": prefill_dt,
+                "decode_dt": decode_dt, "latency_s": latency,
+                "penalty_s": penalty, "hedge_at": hedge_at}
+
+    # ------------------------------------------------------------------
     def run_batch(self, requests: List[Request]) -> List[Request]:
         """Prefill a batch of same-padded-SL requests, then decode.
 
@@ -69,11 +195,16 @@ class ServeEngine:
         used its budget (prefill included) and the remaining tokens are
         curtailed — latency SLO over completion. Transient decode faults
         are retried with backoff (the injected ones fire before the jitted
-        call, so no cache state is lost).
+        call, so no cache state is lost). With ``n_replicas > 1`` a batch
+        running ``hedge_factor``× past its per-SL median baseline is hedged
+        onto another replica; only the winning execution's tokens are
+        committed and counted.
         """
         mreg = obs.metrics
         mreg.gauge("serve_queue_depth").set(len(requests))
         admitted = requests[:self.batch_size]
+        for r in admitted:
+            r.shed = False                # a requeued request runs clean
         for r in requests[self.batch_size:]:              # shed-on-overload
             r.shed = True
         n_shed = len(requests) - len(admitted)
@@ -99,69 +230,61 @@ class ServeEngine:
         waste = 1.0 - real_tokens / float(self.batch_size * sl)
         mreg.gauge("serve_padding_waste").set(waste)
         mreg.histogram("serve_padding_waste_frac", sl=sl).observe(waste)
-        t0 = time.perf_counter()
-        with obs.span("serve/prefill", sl=sl, batch=len(admitted)):
-            logits, caches = self._prefill(self.params,
-                                           {"tokens": jnp.asarray(toks)})
-            jax.block_until_ready(logits)
-        prefill_dt = time.perf_counter() - t0
-        mreg.histogram("serve_prefill_s", sl=sl).observe(prefill_dt)
 
-        # decode greedily; caches from prefill hold exactly sl entries, so
-        # rebuild into the fixed-size serving cache
-        full = self.model.init_cache(self.batch_size, self.max_len)
-        full = jax.tree.map(
-            lambda dst, src: jax.lax.dynamic_update_slice_in_dim(
-                dst, src.astype(dst.dtype), 0, axis=2)
-            if dst.ndim >= 3 and dst.shape[:2] == src.shape[:2]
-            and dst.shape[3:] == src.shape[3:] else src.astype(dst.dtype),
-            full, caches)
-        token = jnp.argmax(logits[:, -1] if logits.ndim == 3 else logits,
-                           axis=-1).astype(jnp.int32)[:, None]
-        n_steps = max((r.max_new_tokens for r in batch), default=0)
-        dec_t0 = time.perf_counter()
-        emitted = 0                       # tokens delivered to real requests
-        decode_calls = 0
-        for step in range(n_steps):
-            for i, r in enumerate(batch):
-                if step < r.max_new_tokens:
-                    r.output.append(int(token[i, 0]))
-                    if i < len(admitted):
-                        emitted += 1
-            if step + 1 >= n_steps:       # final token came from the last
-                break                     # decode (or prefill) — done
-            if self.deadline_s is not None and \
-                    time.perf_counter() - batch_t0 > self.deadline_s:
-                curtailed = sum(max(0, r.max_new_tokens - len(r.output))
-                                for r in admitted)
-                mreg.counter("serve_deadline_exceeded_total").inc()
-                obs.event("serve_deadline", sl=sl,
-                          deadline_s=self.deadline_s,
-                          curtailed_tokens=curtailed)
-                break
-            t1 = time.perf_counter()
-            with obs.span("serve/decode_token", pos=sl + step):
-                def decode_once():
-                    faults.fire("decode", self._decode_calls)
-                    return self._decode(self.params, full, token,
-                                        jnp.asarray(sl + step, jnp.int32))
-                logits, full = retry_with_backoff(
-                    decode_once, retries=self.policy.max_retries,
-                    base_delay=self.policy.backoff_base_s,
-                    factor=self.policy.backoff_factor, label="serve_decode")
-                self._decode_calls += 1
-                decode_calls += 1
-                token = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
-                jax.block_until_ready(token)
-            mreg.histogram("serve_decode_token_s", sl=sl).observe(
-                time.perf_counter() - t1)
-        decode_dt = time.perf_counter() - dec_t0 if n_steps else 0.0
+        primary = self.replicas.pick_primary()
+        baseline = self.latency_watchdog.baseline(sl)
+        cutoff = self.hedge_factor * baseline \
+            if baseline is not None and self.replicas.n > 1 else None
+        result = self._execute(batch, len(admitted), toks, sl, batch_t0,
+                               cutoff)
+        winner, hedged = primary, False
+        if result["hedge_at"] is not None:
+            hedge_replica = self.replicas.pick_hedge(exclude=primary)
+            mreg.counter("serve_hedges_total").inc()
+            obs.event("hedge_fired", sl=sl, primary=primary,
+                      hedge_replica=hedge_replica,
+                      at_s=result["hedge_at"], baseline_s=baseline,
+                      factor=self.hedge_factor)
+            hedge = self._execute(batch, len(admitted), toks, sl, batch_t0,
+                                  None)
+            # the hedge starts at the detection instant, so its virtual
+            # finish line is detection time + its own latency
+            hedge_total = result["hedge_at"] + hedge["latency_s"]
+            if hedge_total < result["latency_s"]:
+                self.replicas.mark_slow(primary)
+                self.replicas.mark_ok(hedge_replica)
+                mreg.counter("serve_hedge_wins_total").inc()
+                obs.event("hedge_won", sl=sl, winner=hedge_replica,
+                          latency_s=hedge_total,
+                          primary_latency_s=result["latency_s"])
+                obs.event("hedge_cancelled", sl=sl, loser=primary,
+                          wasted_tokens=result["emitted"])
+                hedge["latency_s"] = hedge_total
+                result, winner, hedged = hedge, hedge_replica, True
+            else:
+                self.replicas.mark_ok(primary)
+                obs.event("hedge_cancelled", sl=sl, loser=hedge_replica,
+                          wasted_tokens=hedge["emitted"])
+        else:
+            self.replicas.mark_ok(primary)
+
+        # commit the winning execution only: the loser's tokens never reach
+        # the caller or the tokens_out counter
+        for i, r in enumerate(admitted):
+            r.output.extend(result["outputs"][i])
+        latency = result["latency_s"]
+        self.latency_watchdog.observe(sl, latency)
+        mreg.histogram("serve_batch_latency_s", sl=sl).observe(latency)
         # tokens_out counts tokens actually emitted to real requests — not
         # requested tokens summed over the padded batch — so serve
-        # throughput metrics stay honest under shedding and deadlines
-        self.log.append(sl, prefill_dt, decode_s=decode_dt,
-                        decode_steps=float(decode_calls),
-                        tokens_out=float(emitted))
+        # throughput metrics stay honest under shedding, deadlines, and
+        # hedging
+        self.log.append(sl, result["prefill_dt"],
+                        decode_s=result["decode_dt"],
+                        decode_steps=float(result["decode_calls"]),
+                        tokens_out=float(result["emitted"]),
+                        latency_s=latency, hedged=float(hedged),
+                        replica=float(winner))
         return requests
 
     def seqpoints(self, **kw) -> SeqPointSet:

@@ -19,10 +19,14 @@ conditions, so the step loop is wrapped in a recovery ladder
 * a preemption writes an emergency checkpoint pointing at the interrupted
   batch, so the resumed process replays it and the stitched EpochLog (and
   hence ``select_seqpoints``) matches the fault-free run bit-for-bit;
+* a confirmed peer loss (``resilience.elastic``) checkpoints, shrinks the
+  mesh over the surviving hosts, re-shards the restored state, and resumes
+  in-process — the fourth recovery tier;
 * a per-SL running-median watchdog flags stragglers (and injected ones).
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Iterator, Optional, Tuple
@@ -39,7 +43,8 @@ from repro.dist.sharding import tp_activation_wire_bytes
 from repro.core.seqpoint import SeqPointSet, select_seqpoints
 from repro.data.batching import DataIterator
 from repro.models.model_zoo import Model
-from repro.resilience import faults
+from repro.resilience import elastic, faults
+from repro.resilience.elastic import ClusterMonitor, PeerLossFault
 from repro.resilience.guards import (
     DivergenceDetector,
     GuardViolation,
@@ -71,6 +76,8 @@ class TrainerReport:
     rollbacks: int = 0
     guard_violations: int = 0
     skipped_batches: int = 0
+    remeshes: int = 0                # tier-4 elastic re-meshes taken
+    lost_hosts: list = field(default_factory=list)
 
 
 class Trainer:
@@ -78,6 +85,7 @@ class Trainer:
                  ckpt_dir: Optional[str] = None, ckpt_every: int = 50,
                  straggler_factor: float = 3.0, total_steps: int = 1000,
                  policy: Optional[RecoveryPolicy] = None,
+                 cluster: Optional[ClusterMonitor] = None,
                  timer: Callable[[], float] = time.perf_counter):
         self.model = model
         self.run = run
@@ -85,6 +93,9 @@ class Trainer:
         self.ckpt = CheckpointManager(ckpt_dir) if ckpt_dir else None
         self.ckpt_every = ckpt_every
         self.policy = policy or RecoveryPolicy()
+        self.cluster = cluster or ClusterMonitor.from_mesh(run.mesh)
+        self.skiplist = BatchSkipList(
+            skip_after=self.policy.skip_after_failures)
         self.timer = timer
         self.watchdog = StepTimeWatchdog(factor=straggler_factor)
         self.divergence = DivergenceDetector(
@@ -96,13 +107,17 @@ class Trainer:
 
     # ------------------------------------------------------------------
     def _extra(self, step: int) -> dict:
-        return pack_train_extra(step, self.data.state(), self.epoch_log)
+        return pack_train_extra(step, self.data.state(), self.epoch_log,
+                                self.skiplist)
 
     def _retry(self, fn, label: str):
         return retry_with_backoff(
             fn, retries=self.policy.max_retries,
             base_delay=self.policy.backoff_base_s,
-            factor=self.policy.backoff_factor, label=label)
+            factor=self.policy.backoff_factor,
+            max_delay_s=self.policy.max_delay_s,
+            jitter_frac=self.policy.jitter_frac,
+            jitter_seed=self.policy.jitter_seed, label=label)
 
     def init_or_resume(self, rng: jax.Array) -> tuple[TrainState, int]:
         state = init_train_state(self.model, self.run, rng)
@@ -110,12 +125,26 @@ class Trainer:
         if self.ckpt is not None and self.ckpt.latest_step() is not None:
             state, extra = self._retry(lambda: self.ckpt.restore(state),
                                        label="ckpt_restore")
-            start, data_state, log = unpack_train_extra(extra)
+            start, data_state, log, skip_state = unpack_train_extra(extra)
             if data_state is not None:
                 self.data.restore(data_state)
             if log is not None:
                 self.epoch_log = log
+            # a poison batch stays poison across process restarts — the
+            # resumed process must not pay the discovery rollbacks again
+            self.skiplist.restore(skip_state)
         return state, start
+
+    def _comm_profile(self, state: TrainState) -> Tuple[int, int, float]:
+        """(dp_degree, tp_degree, per-step DP grad wire bytes) for the
+        *current* mesh — recomputed after an elastic re-mesh shrinks DP."""
+        dp_deg = self.run.mesh.num_devices \
+            if self.run.parallelism == "dp_only" else self.run.mesh.data_degree
+        tp_deg = self.run.mesh.model_degree \
+            if self.run.parallelism == "tp" else 1
+        dp_bytes = dp_grad_wire_bytes(
+            state.params, self.run.optimizer.grad_compression, dp_deg)
+        return dp_deg, tp_deg, dp_bytes
 
     # ------------------------------------------------------------------
     def train(self, num_steps: int, rng: Optional[jax.Array] = None
@@ -127,16 +156,11 @@ class Trainer:
         # per-step DP gradient wire bytes are SL-independent (one param-sized
         # all-reduce); TP activation bytes scale with SL — both go into
         # EpochLog.stats so SeqPoint projects communication alongside compute
-        dp_deg = self.run.mesh.num_devices \
-            if self.run.parallelism == "dp_only" else self.run.mesh.data_degree
-        tp_deg = self.run.mesh.model_degree \
-            if self.run.parallelism == "tp" else 1
-        dp_bytes = dp_grad_wire_bytes(
-            state.params, self.run.optimizer.grad_compression, dp_deg)
+        dp_deg, tp_deg, dp_bytes = self._comm_profile(state)
         obs.event("train_start", model=self.run.model.name, start_step=start,
                   num_steps=num_steps, dp_degree=dp_deg, tp_degree=tp_deg)
         mreg = obs.metrics
-        skiplist = BatchSkipList(skip_after=self.policy.skip_after_failures)
+        skiplist = self.skiplist
         rollbacks = 0
         end = start + num_steps
         step = start
@@ -161,6 +185,9 @@ class Trainer:
                 continue
             new_state = None
             try:
+                # heartbeat interval: raises PeerLossFault once the tracker
+                # confirms a host lost (tier-4 re-mesh arm below)
+                self.cluster.pulse(step)
                 with obs.span("train/step", step=step) as step_span:
                     with obs.span("train/data_fetch"):
                         def fetch():
@@ -189,6 +216,18 @@ class Trainer:
             except PreemptionFault:
                 return self._handle_preemption(step, start, state,
                                                pre_fetch, report)
+            except PeerLossFault as e:
+                mreg.counter("train_peer_losses_total").inc(len(e.hosts))
+                obs.event("peer_lost", step=step, hosts=sorted(e.hosts),
+                          tick=e.tick)
+                if self.ckpt is None \
+                        or report.remeshes >= self.policy.max_remeshes:
+                    raise
+                state, step = self._remesh(e, step, start, state,
+                                           pre_fetch, report)
+                dp_deg, tp_deg, dp_bytes = self._comm_profile(state)
+                it = iter(self.data)  # regenerate from restored position
+                continue
             except GuardViolation as e:
                 report.guard_violations += 1
                 mreg.counter("train_guard_violations_total").inc()
@@ -275,7 +314,10 @@ class Trainer:
             state, extra = self._retry(
                 lambda: self.ckpt.restore(like, fallback=True),
                 label="ckpt_restore")
-            ckpt_step, data_state, log = unpack_train_extra(extra)
+            # NOTE: the skip list is deliberately NOT restored here — the
+            # checkpoint predates the failures just recorded, and merging
+            # an older snapshot must never undo in-memory poison status
+            ckpt_step, data_state, log, _ = unpack_train_extra(extra)
             if data_state is not None:
                 self.data.restore(data_state)
             if log is not None:
@@ -286,6 +328,60 @@ class Trainer:
             self.divergence.reset()
         obs.metrics.counter("train_rollbacks_total").inc()
         obs.event("rollback", to_step=ckpt_step, poison_batch=poison)
+        return state, ckpt_step
+
+    def _remesh(self, e: PeerLossFault, step: int, start: int,
+                state: TrainState, pre_fetch_state: Dict[str, int],
+                report: TrainerReport) -> Tuple[TrainState, int]:
+        """Tier 4: elastic re-mesh after a confirmed peer loss.
+
+        Checkpoint (pinned at the batch about to run), shrink the mesh's
+        data axis past the dead hosts, restore + re-shard onto the
+        survivors, and resume in-process. The restored iterator position
+        and partial EpochLog make the replayed steps re-log identical
+        (sl, runtime) records, so SeqPoint selection survives the shrink;
+        only the communication stats (dp_wire_bytes) change with the
+        smaller DP degree, as they physically must.
+        """
+        lost = sorted(set(e.hosts) | self.cluster.dead_hosts)
+        with obs.span("train/remesh", step=step, lost=lost):
+            # pin the survivors' state before touching the mesh: if the
+            # shrink itself fails we can still resume from here
+            self._wait_ckpt()
+            extra = pack_train_extra(step, pre_fetch_state, self.epoch_log,
+                                     self.skiplist)
+            self._retry(lambda: self.ckpt.save(step, state, extra=extra),
+                        label="ckpt_save")
+            obs.event("checkpoint", step=step, mode="remesh")
+            # shrink: raises ClusterFailure when nothing survives
+            new_mesh, _ = self.cluster.domains.surviving_mesh(lost)
+            self.cluster = self.cluster.after_loss(e.hosts)
+            self.run = dataclasses.replace(self.run, mesh=new_mesh)
+            state, extra = self._retry(
+                lambda: self.ckpt.restore(state, fallback=True),
+                label="ckpt_restore")
+            ckpt_step, data_state, log, skip_state = unpack_train_extra(extra)
+            if data_state is not None:
+                self.data.restore(data_state)
+            if log is not None:
+                self.epoch_log = log
+            self.skiplist.restore(skip_state)
+            state, n_sharded = elastic.reshard_state(state, self.run)
+            done = max(ckpt_step - start, 0)
+            del report.losses[done:]
+            del report.step_times[done:]
+            self.divergence.reset()
+        report.remeshes += 1
+        report.lost_hosts.extend(lost)
+        mreg = obs.metrics
+        mreg.counter("train_remeshes_total").inc()
+        mreg.gauge("cluster_healthy_hosts").set(len(self.cluster.hosts))
+        mreg.gauge("train_dp_degree").set(new_mesh.data_degree)
+        obs.event("remesh", step=ckpt_step, lost_hosts=lost,
+                  new_shape=list(new_mesh.shape),
+                  data_degree=new_mesh.data_degree,
+                  surviving_hosts=list(self.cluster.hosts),
+                  resharded_params=n_sharded)
         return state, ckpt_step
 
     def _handle_preemption(self, step: int, start: int, state: TrainState,
@@ -303,7 +399,7 @@ class Trainer:
             with obs.span("train/checkpoint_preempt", step=step):
                 self._wait_ckpt()
                 extra = pack_train_extra(step, pre_fetch_state,
-                                         self.epoch_log)
+                                         self.epoch_log, self.skiplist)
                 self._retry(lambda: self.ckpt.save(step, state, extra=extra),
                             label="ckpt_save")
             obs.event("checkpoint", step=step, mode="preempt")

@@ -175,6 +175,25 @@ def test_dp_grad_wire_bytes_scaling():
     assert dp_grad_wire_bytes(p, "bf16", 4) == pytest.approx(full / 2)
 
 
+def test_dp_grad_wire_bytes_grad_dtype_and_micro_reduces():
+    from repro.dist.compression import wire_bytes_per_elem
+
+    p = {"w": jnp.zeros((1000,), jnp.float32)}
+    full = dp_grad_wire_bytes(p, "none", 4)
+    # uncompressed bf16 grads are half the wire width of f32 grads
+    assert dp_grad_wire_bytes(p, "none", 4, grad_dtype_bytes=2.0) \
+        == pytest.approx(full / 2)
+    # compressed methods fix their own wire format: native width irrelevant
+    assert dp_grad_wire_bytes(p, "int8_ef", 4, grad_dtype_bytes=2.0) \
+        == pytest.approx(full / 4)
+    # ZeRO-3 reduce-scatters every microbatch
+    assert dp_grad_wire_bytes(p, "none", 4, micro_reduces=4) \
+        == pytest.approx(4 * full)
+    assert wire_bytes_per_elem("none", 2.0) == 2.0
+    assert wire_bytes_per_elem("bf16", 2.0) == 2.0
+    assert wire_bytes_per_elem("int8_ef", 2.0) == 1.0
+
+
 def test_tp_wire_bytes_proportional_to_sl():
     cfg = smoke_config("starcoder2-3b")
     b1 = tp_activation_wire_bytes(cfg, 8, 1024, 4)

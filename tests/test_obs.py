@@ -249,6 +249,64 @@ def test_analytic_wire_bytes_decode_uses_single_token():
     assert a["total"] == pytest.approx(a["tp_activation"])
 
 
+def test_analytic_wire_bytes_grad_dtype_and_zero_micro_reduces():
+    from repro.configs import get_model_config, get_shape
+    from repro.obs.projection import analytic_wire_bytes
+
+    cfg = get_model_config("starcoder2-3b")
+    train = get_shape("train_4k")
+    base = analytic_wire_bytes(cfg, train, parallelism="tp", dp_degree=4,
+                               tp_degree=4)
+    bf16 = analytic_wire_bytes(cfg, train, parallelism="tp", dp_degree=4,
+                               tp_degree=4, grad_dtype_bytes=2.0)
+    assert bf16["dp_grad"] == pytest.approx(base["dp_grad"] / 2)
+    assert bf16["tp_activation"] == pytest.approx(base["tp_activation"])
+    micro = analytic_wire_bytes(cfg, train, parallelism="tp", dp_degree=4,
+                                tp_degree=4, micro_reduces=4)
+    assert micro["dp_grad"] == pytest.approx(4 * base["dp_grad"])
+
+
+def test_cell_projection_micro_counted_normalizes_rolled_scan():
+    # compile-mode HLO rolls the microbatch scan: measured stats contain
+    # one microbatch body, so the analytic dp term must not be multiplied
+    # by the full microbatch count
+    from repro.configs import MeshConfig, RunConfig, get_model_config, \
+        get_shape
+    from repro.obs.projection import cell_collective_projection
+    from repro.perfmodel.hlo import CollectiveStats
+
+    cfg = get_model_config("starcoder2-3b")
+    train = get_shape("train_4k")
+    run = RunConfig(model=cfg, shape=train,
+                    mesh=MeshConfig(shape=(4, 4), axes=("data", "model")),
+                    fsdp=True, microbatches=4)
+    assert run.zero_stage >= 3 and run.compute_dtype == "bfloat16"
+    measured = CollectiveStats()
+    measured.count["all-reduce"] = 1
+    measured.buffer_bytes["all-reduce"] = 10**9
+    measured.count["all-gather"] = 4
+    measured.buffer_bytes["all-gather"] = 10**9
+    rolled = cell_collective_projection(cfg, train, run, measured,
+                                        micro_counted=1)
+    full = cell_collective_projection(cfg, train, run, measured)
+    assert rolled["micro_reduces"] == 4 and rolled["micro_counted"] == 1
+    assert full["micro_counted"] == 4
+    assert full["analytic_dp_bytes"] == \
+        pytest.approx(4 * rolled["analytic_dp_bytes"])
+    assert rolled["grad_dtype_bytes"] == 2.0
+    # the claimed residual compares against all-reduce wire only; the
+    # ZeRO all-gather stays in measured_wire_bytes but not in claimed
+    assert rolled["measured_claimed_wire_bytes"] < \
+        rolled["measured_reduce_wire_bytes"] <= rolled["measured_wire_bytes"]
+    assert "rel_error_claimed" in rolled
+    # spec-derived DP ring size overrides the param-count assumption
+    shrunk = cell_collective_projection(cfg, train, run, measured,
+                                        micro_counted=1,
+                                        dp_reduce_elems=1000.0)
+    assert shrunk["dp_reduce_elems"] == 1000.0
+    assert shrunk["analytic_dp_bytes"] < rolled["analytic_dp_bytes"]
+
+
 # ------------------------------------------------------- end-to-end trainer
 
 

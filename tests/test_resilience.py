@@ -21,15 +21,22 @@ from repro.data.synthetic import IWSLT_LIKE
 from repro.models import Runtime, build_model
 from repro.resilience import (
     BatchSkipList,
+    ClusterFailure,
+    ClusterMonitor,
     DivergenceDetector,
     DivergenceError,
+    FailureDomains,
     FaultPlan,
     FaultSpec,
     NonFiniteLossError,
+    PeerHealthTracker,
+    PeerLossFault,
     PreemptionFault,
     RecoveryPolicy,
+    ReplicaSet,
     StepTimeWatchdog,
     TransientFault,
+    backoff_delay,
     check_finite,
     faults,
     retry_with_backoff,
@@ -56,6 +63,10 @@ def test_fault_spec_parsing():
     assert (s.point, s.step, s.prob, s.times) == ("decode", None, 0.25, 3)
     s = FaultSpec.parse("straggler@3:delay=0.5")
     assert s.delay == 0.5
+    s = FaultSpec.parse("peer_loss@7:host=2")
+    assert (s.point, s.step, s.host) == ("peer_loss", 7, 2)
+    s = FaultSpec.parse("peer_slow@4:host=1:delay=0.1")
+    assert (s.host, s.delay) == (1, 0.1)
     with pytest.raises(ValueError):
         FaultSpec.parse("x@1:bogus=1")
 
@@ -177,17 +188,58 @@ def test_batch_skip_list():
     assert sl.should_skip(key) and not sl.should_skip((0, 8))
 
 
+def test_batch_skip_list_state_round_trip():
+    sl = BatchSkipList(skip_after=2)
+    sl.record_failure((0, 7))
+    sl.record_failure((0, 7))
+    sl.record_failure((1, 3))
+    snap = sl.state()
+    import json
+    json.dumps(snap)                                 # must be JSON-able
+    other = BatchSkipList(skip_after=2)
+    other.restore(snap)
+    assert other.poisoned == {(0, 7)}
+    assert other.record_failure((1, 3))              # count carried over
+    # merging an older snapshot never undoes in-memory poison status
+    other.restore({"failures": [[[0, 7], 1]], "skip": []})
+    assert other.poisoned == {(0, 7), (1, 3)}
+    other.restore(None)                              # no-op
+    assert other.poisoned == {(0, 7), (1, 3)}
+
+
+def test_backoff_delay_cap_and_deterministic_jitter():
+    # uncapped exponential would hit 0.02 * 2**9 = 10.24s; the cap holds
+    d = backoff_delay(10, base_delay=0.02, factor=2.0, max_delay_s=2.0,
+                      jitter_frac=0.0)
+    assert d == 2.0
+    # jitter stays within +/- frac and never exceeds the cap
+    for attempt in range(1, 12):
+        d = backoff_delay(attempt, base_delay=0.02, factor=2.0,
+                          max_delay_s=2.0, jitter_frac=0.25, jitter_seed=0,
+                          label="x")
+        raw = min(0.02 * 2.0 ** (attempt - 1), 2.0)
+        assert 0.75 * raw <= d <= min(1.25 * raw, 2.0)
+    # deterministic per seed (chaos replay parity) ...
+    a = backoff_delay(3, jitter_seed=7, label="ckpt_save")
+    b = backoff_delay(3, jitter_seed=7, label="ckpt_save")
+    assert a == b
+    # ... but replicas with different seeds desynchronize
+    spread = {backoff_delay(3, jitter_seed=s, label="ckpt_save")
+              for s in range(16)}
+    assert len(spread) > 8
+
+
 # -------------------------------------------------------------------------
 # trainer chaos paths
 
 
-def _tiny_run():
+def _tiny_run(mesh_shape=(1,), mesh_axes=("data",)):
     cfg = smoke_config("starcoder2-3b").with_overrides(num_layers=2,
                                                        d_model=64, d_ff=128,
                                                        vocab_size=256)
     shape = ShapeConfig("tiny", seq_len=32, global_batch=8,
                         step=StepKind.TRAIN)
-    mesh = MeshConfig(shape=(1,), axes=("data",))
+    mesh = MeshConfig(shape=mesh_shape, axes=mesh_axes)
     run = RunConfig(model=cfg, shape=shape, mesh=mesh,
                     optimizer=OptimizerConfig(lr=1e-3, warmup_steps=2),
                     param_dtype="float32", compute_dtype="float32")
@@ -207,8 +259,8 @@ class FakeClock:
 
 
 def _make_trainer(tmp_path, *, ckpt_every=4, total=16, timer=None,
-                  policy=None):
-    cfg, run = _tiny_run()
+                  policy=None, mesh_shape=(1,)):
+    cfg, run = _tiny_run(mesh_shape=mesh_shape)
     model = build_model(cfg, Runtime.from_run(run))
     data = DataIterator(IWSLT_LIKE, samples_per_epoch=256, batch_size=8,
                         vocab_size=cfg.vocab_size, granularity=8, seed=1)
@@ -398,6 +450,259 @@ def test_serve_decode_fault_is_retried():
                     max_new_tokens=4)]
     eng.run_batch(reqs)
     assert len(reqs[0].output) == 4                  # fault was invisible
+
+
+# -------------------------------------------------------------------------
+# multi-host failure domains (resilience.elastic)
+
+
+def test_failure_domains_mapping_and_shrink():
+    mesh = MeshConfig(shape=(4, 2), axes=("data", "model"))
+    dom = FailureDomains.from_mesh(mesh)             # one host per data row
+    assert dom.num_hosts == 4 and dom.devices_per_host == 2
+    assert dom.devices_of(0) == [0, 1]
+    assert dom.devices_of(3) == [6, 7]
+    assert [dom.host_of(d) for d in range(8)] == [0, 0, 1, 1, 2, 2, 3, 3]
+    assert dom.surviving_devices([1]) == [0, 1, 4, 5, 6, 7]
+    new_mesh, new_dom = dom.surviving_mesh([1])
+    assert new_mesh.shape == (3, 2) and new_mesh.axes == ("data", "model")
+    assert new_dom.num_hosts == 3
+    # losing nobody is the identity
+    same_mesh, same_dom = dom.surviving_mesh([])
+    assert same_mesh == mesh and same_dom is dom
+    with pytest.raises(ClusterFailure):
+        dom.surviving_mesh([0, 1, 2, 3])             # nothing left
+
+
+def test_failure_domains_coarser_hosts():
+    mesh = MeshConfig(shape=(4, 2), axes=("data", "model"))
+    dom = FailureDomains.from_mesh(mesh, num_hosts=2)  # 2 data rows / host
+    assert dom.devices_of(1) == [4, 5, 6, 7]
+    new_mesh, _ = dom.surviving_mesh([0])
+    assert new_mesh.shape == (2, 2)
+    with pytest.raises(ValueError):                  # 4 rows, 3 hosts
+        FailureDomains.from_mesh(mesh, num_hosts=3)
+
+
+def test_peer_health_tracker_confirms_after_misses():
+    tk = PeerHealthTracker([0, 1, 2], confirm_misses=2)
+    v = tk.observe({0, 2}, tick=0)                   # host 1 misses once
+    assert v.suspect == {1} and not v.confirmed_lost
+    v = tk.observe({0, 1, 2}, tick=1)                # late beat resets it
+    assert not v.suspect and not v.confirmed_lost
+    v = tk.observe({0, 2}, tick=2)
+    v = tk.observe({0, 2}, tick=3)                   # second consecutive miss
+    assert v.confirmed_lost == {1}
+    tk.forget([1])
+    assert tk.hosts == (0, 2)
+
+
+def test_cluster_monitor_confirms_peer_loss():
+    faults.install(FaultPlan.parse("peer_loss@3:host=1"))
+    mon = ClusterMonitor.from_mesh(MeshConfig(shape=(4,), axes=("data",)))
+    for t in range(3):
+        mon.pulse(t)                                 # all healthy
+    mon.pulse(3)                                     # first missed beat
+    assert mon.healthy_hosts == (0, 2, 3)
+    with pytest.raises(PeerLossFault) as ei:
+        mon.pulse(4)                                 # second miss: confirmed
+    assert ei.value.hosts == {1}
+    survivor = mon.after_loss(ei.value.hosts)
+    assert survivor.domains.mesh.shape == (3,)
+    assert survivor.hosts == (0, 1, 2)               # renumbered
+
+
+def test_cluster_monitor_peer_slow_is_not_a_loss():
+    faults.install(FaultPlan.parse("peer_slow@3:host=1:delay=0.1"))
+    mon = ClusterMonitor.from_mesh(MeshConfig(shape=(4,), axes=("data",)))
+    for t in range(8):
+        mon.pulse(t)                                 # one miss never confirms
+    assert mon.healthy_hosts == (0, 1, 2, 3)
+
+
+def test_cluster_monitor_partition_loses_far_side():
+    faults.install(FaultPlan.parse("mesh_partition@2:host=2"))
+    mon = ClusterMonitor.from_mesh(MeshConfig(shape=(4,), axes=("data",)))
+    mon.pulse(0)
+    mon.pulse(1)
+    mon.pulse(2)                                     # hosts 2,3 cut off
+    with pytest.raises(PeerLossFault) as ei:
+        mon.pulse(3)
+    assert ei.value.hosts == {2, 3}
+
+
+def test_replica_set_strikes_and_picks():
+    rs = ReplicaSet(3)
+    assert rs.pick_primary() == 0
+    rs.mark_slow(0)
+    assert rs.pick_primary() == 1
+    assert rs.pick_hedge(exclude=1) == 2
+    rs.mark_ok(0)
+    assert rs.strikes(0) == 0
+    assert ReplicaSet(1).pick_hedge(exclude=0) is None
+    with pytest.raises(ValueError):
+        ReplicaSet(0)
+
+
+# -------------------------------------------------------------------------
+# trainer tier-4: elastic re-mesh
+
+
+def test_elastic_remesh_preserves_seqpoint_selection(tmp_path):
+    steps = 12
+    ref = _make_trainer(tmp_path / "ref", timer=FakeClock(),
+                        mesh_shape=(4,))
+    ref_rep = ref.train(steps)
+    ref_sp = ref.seqpoints(error_threshold=0.1, n_threshold=32)
+
+    # host 2 dies at step 6; confirmed one pulse later; the trainer
+    # checkpoints, shrinks the mesh to 3 hosts, and finishes in-process
+    faults.install(FaultPlan.parse("peer_loss@6:host=2"))
+    tr = _make_trainer(tmp_path / "ck", timer=FakeClock(), mesh_shape=(4,))
+    rep = tr.train(steps)
+    assert rep.remeshes == 1 and rep.lost_hosts == [2]
+    assert not rep.preempted and rep.steps == steps
+    assert tr.run.mesh.shape == (3,)                 # DP axis shrunk
+    assert tr.cluster.hosts == (0, 1, 2)             # survivors renumbered
+    np.testing.assert_allclose(rep.losses, ref_rep.losses,
+                               rtol=1e-5, atol=1e-6)
+    # per-iteration (SL, runtime) parity is exact — SeqPoint selection only
+    # reads those — while dp_wire_bytes legitimately changes with DP degree
+    assert [it.seq_len for it in tr.epoch_log.iterations] == \
+        [it.seq_len for it in ref.epoch_log.iterations]
+    assert [it.runtime for it in tr.epoch_log.iterations] == \
+        [it.runtime for it in ref.epoch_log.iterations]
+    sp = tr.seqpoints(error_threshold=0.1, n_threshold=32)
+    assert sp.seq_lens == ref_sp.seq_lens
+    np.testing.assert_array_equal(sp.weights, ref_sp.weights)
+
+
+def test_elastic_remesh_without_ckpt_raises():
+    cfg, run = _tiny_run(mesh_shape=(4,))
+    model = build_model(cfg, Runtime.from_run(run))
+    data = DataIterator(IWSLT_LIKE, samples_per_epoch=256, batch_size=8,
+                        vocab_size=cfg.vocab_size, granularity=8, seed=1)
+    faults.install(FaultPlan.parse("peer_loss@2:host=1"))
+    tr = Trainer(model, run, data)                   # no ckpt: no tier 4
+    with pytest.raises(PeerLossFault):
+        tr.train(6)
+
+
+def test_single_host_loss_is_cluster_failure(tmp_path):
+    # a (1,) mesh has one failure domain; losing it cannot be re-meshed
+    faults.install(FaultPlan.parse("peer_loss@2:host=0"))
+    tr = _make_trainer(tmp_path / "ck")
+    with pytest.raises(ClusterFailure):
+        tr.train(6)
+
+
+# -------------------------------------------------------------------------
+# skip list survives preemption resume
+
+
+def test_skiplist_survives_preemption_resume(tmp_path):
+    # batch at step 5 is persistently poisoned (two NaNs), then a preemption
+    # at step 8 forces a process restart: the resumed trainer must remember
+    # the poison without paying the discovery rollbacks again
+    faults.install(FaultPlan.parse("nan_loss@5:times=2,preempt@8"))
+    ck = tmp_path / "ck"
+    tr = _make_trainer(ck)
+    rep = tr.train(12)
+    assert rep.rollbacks == 2 and rep.skipped_batches == 1
+    assert rep.preempted and rep.steps == 8
+    poisoned = tr.skiplist.poisoned
+    assert poisoned
+
+    tr2 = _make_trainer(ck)
+    rep2 = tr2.train(12 - rep.steps)
+    assert tr2.skiplist.poisoned == poisoned         # restored from extra
+    assert rep2.rollbacks == 0                       # no rediscovery
+    assert rep2.steps == 12 - rep.steps and not rep2.preempted
+
+
+# -------------------------------------------------------------------------
+# serve: deadline/shed interplay and request hedging
+
+
+def test_serve_deadline_only_checked_between_decode_steps():
+    from repro.serve.engine import Request
+
+    # zero budget, but the single requested token comes from prefill: it is
+    # delivered because the deadline is only consulted between decode steps
+    from repro import obs
+
+    eng = _engine(deadline_s=0.0)
+    reqs = [Request(prompt=np.arange(1, 9, dtype=np.int32),
+                    max_new_tokens=1)]
+    before = obs.metrics.counter("serve_deadline_exceeded_total").value
+    eng.run_batch(reqs)
+    after = obs.metrics.counter("serve_deadline_exceeded_total").value
+    assert len(reqs[0].output) == 1
+    assert eng.log.iterations[-1].stats["decode_steps"] == 0.0
+    assert after == before                           # never even checked
+
+
+def test_serve_shed_request_requeues_cleanly():
+    from repro.serve.engine import Request
+
+    eng = _engine()
+    reqs = [Request(prompt=np.arange(1, 9, dtype=np.int32),
+                    max_new_tokens=3) for _ in range(3)]
+    eng.run_batch(reqs)
+    assert reqs[2].shed and reqs[2].output == []     # empty: safe to requeue
+    eng.run_batch([reqs[2]])
+    assert not reqs[2].shed                          # admitted this time
+    assert len(reqs[2].output) == 3
+
+
+def _run_serve(n_replicas, plan, n_batches=10, max_new_tokens=8):
+    from repro.serve.engine import Request
+
+    faults.install(FaultPlan.parse(plan) if plan else None)
+    eng = _engine(n_replicas=n_replicas, hedge_factor=3.0,
+                  policy=RecoveryPolicy(backoff_base_s=0.0))
+    lat = []
+    all_reqs = []
+    for _ in range(n_batches):
+        reqs = [Request(prompt=np.arange(1, 9, dtype=np.int32),
+                        max_new_tokens=max_new_tokens)]
+        eng.run_batch(reqs)
+        all_reqs.extend(reqs)
+        lat.append(eng.log.iterations[-1].stats["latency_s"])
+    return eng, lat, all_reqs
+
+
+def test_hedged_serve_cuts_tail_latency():
+    # the 9th execution runs on a degraded link: every decode call is 2.0s
+    # late (virtually). Unhedged eats the full tail; hedged re-issues on the
+    # healthy replica and commits the fast finisher.
+    plan = "peer_slow@8:delay=2.0"
+    _, unhedged, _ = _run_serve(1, plan)
+    eng, hedged, reqs = _run_serve(2, plan)
+    assert unhedged[8] > 10.0                        # 7 decode calls x 2.0s
+    assert hedged[8] < unhedged[8] / 2
+    assert np.percentile(hedged, 99) < np.percentile(unhedged, 99)
+    rec = eng.log.iterations[8]
+    assert rec.stats["hedged"] == 1.0
+    assert rec.stats["replica"] == 1.0               # hedge replica won
+    from repro import obs
+    assert obs.metrics.counter("serve_hedges_total").value >= 1
+    assert obs.metrics.counter("serve_hedge_wins_total").value >= 1
+    assert eng.replicas.strikes(0) >= 1              # loser took a strike
+
+
+def test_hedge_cancelled_tokens_never_reach_caller_or_counter():
+    eng, _, reqs = _run_serve(2, "peer_slow@8:delay=2.0")
+    # exactly max_new_tokens per request — a double-commit would show up as
+    # 16 tokens on the hedged batch's request
+    assert all(len(r.output) == 8 for r in reqs)
+    assert all(it.stats["tokens_out"] == 8.0 for it in eng.log.iterations)
+    assert sum(it.stats["tokens_out"] for it in eng.log.iterations) == 80.0
+
+
+def test_unhedged_single_replica_never_hedges():
+    eng, _, _ = _run_serve(1, "peer_slow@4:delay=2.0", n_batches=6)
+    assert all(it.stats["hedged"] == 0.0 for it in eng.log.iterations)
 
 
 # -------------------------------------------------------------------------
