@@ -209,9 +209,11 @@ class EncDecLM:
                               unroll=cfg.num_layers if rt.unroll_layers else 1)
         return layer_norm(x, p["dec_ln"]["w"], p["dec_ln"]["b"]), ncs
 
-    def _embed_tokens(self, p, tokens, pos0: int = 0):
+    def _embed_tokens(self, p, tokens, pos0=0):
         x = p["embed"][tokens].astype(self.rt.compute_dtype)
-        pos = p["dec_pos"][pos0:pos0 + tokens.shape[1]]
+        # dynamic_slice so pos0 may be a traced offset (slot admission)
+        pos = jax.lax.dynamic_slice_in_dim(
+            p["dec_pos"], jnp.asarray(pos0, jnp.int32), tokens.shape[1])
         return constrain(x + pos.astype(x.dtype), "dp", None, None)
 
     def loss(self, p: Params, batch: Dict[str, jax.Array]):
@@ -226,10 +228,10 @@ class EncDecLM:
         loss = softmax_xent(logits, batch["labels"], cfg.vocab_size)
         return loss, {"xent": loss}
 
-    def prefill(self, p: Params, batch: Dict[str, jax.Array]):
+    def prefill(self, p: Params, batch: Dict[str, jax.Array], pos0=0):
         enc_out = self.encode(p, batch["frames"])
         cross_kv = self._cross_kv(p, enc_out)
-        x = self._embed_tokens(p, batch["tokens"], 0)
+        x = self._embed_tokens(p, batch["tokens"], pos0)
         x, self_kv = self._decoder(p, x, cross_kv, return_caches=True)
         logits = jnp.einsum("bsd,dv->bsv", x[:, -1:], p["embed"].T)
         return logits, {"self": self_kv, "cross": cross_kv}

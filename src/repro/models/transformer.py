@@ -353,9 +353,13 @@ class TransformerLM:
             [labels[:, 1:], jnp.full_like(labels[:, :1], -1)], axis=1)
         return softmax_xent(logits, labels2, cfg.vocab_size)
 
-    def prefill(self, p: Params, batch: Dict[str, jax.Array]):
+    def prefill(self, p: Params, batch: Dict[str, jax.Array],
+                pos0: jax.Array | int = 0):
+        """Prefill a prompt. ``pos0`` offsets the rope positions so a prompt
+        can be placed at an absolute cache offset (continuous-batching slot
+        admission); the causal mask is local to the window either way."""
         x = self._embed(p, batch)
-        positions = jnp.arange(x.shape[1])
+        positions = jnp.asarray(pos0, jnp.int32) + jnp.arange(x.shape[1])
         x, _, caches = self._stack(p, x, positions, return_caches=True)
         logits = self._head(p, x[:, -1:])
         return logits, caches

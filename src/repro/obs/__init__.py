@@ -33,9 +33,11 @@ from repro.obs.metrics import (
     Gauge,
     Histogram,
     MetricsRegistry,
+    MetricsServer,
     bucket_bound,
     get_registry,
     metrics,
+    serve_http,
 )
 from repro.obs.projection import (
     ProjectionMonitor,
@@ -58,12 +60,13 @@ from repro.obs.trace import (
 
 __all__ = [
     "Counter", "DEFAULT_EVENTS_PATH", "EventSink", "Gauge", "Histogram",
-    "MetricsRegistry", "NULL_SPAN", "ProjectionMonitor", "ProjectionReport",
-    "SLResidual", "Tracer", "analytic_wire_bytes",
+    "MetricsRegistry", "MetricsServer", "NULL_SPAN", "ProjectionMonitor",
+    "ProjectionReport", "SLResidual", "Tracer", "analytic_wire_bytes",
     "cell_collective_projection", "collective_projection_report",
     "bucket_bound", "disable", "enable", "enable_tracing", "event",
     "export_all", "get_registry", "get_sink", "get_tracer", "metrics",
-    "set_sink", "set_tracer", "span", "traced", "tracing_enabled",
+    "serve_http", "set_sink", "set_tracer", "span", "traced",
+    "tracing_enabled",
 ]
 
 _OUT_DIR: Optional[str] = None

@@ -1,0 +1,10 @@
+"""repro.serve — the serving side of the stack.
+
+``engine`` holds the batched prefill+decode executor (``ServeEngine``);
+``sched`` holds the SL-aware request-lifecycle scheduler (admission queues,
+pluggable policies, and the continuous-batching loop). See
+``src/repro/serve/README.md`` for the architecture.
+"""
+from repro.serve.engine import Request, ServeEngine
+
+__all__ = ["Request", "ServeEngine"]

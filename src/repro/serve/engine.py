@@ -24,7 +24,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -46,6 +46,7 @@ class Request:
     max_new_tokens: int = 16
     output: List[int] = field(default_factory=list)
     shed: bool = False            # dropped on overload, never ran
+    curtailed: bool = False       # deadline hit mid-decode: partial output
 
 
 class ServeEngine:
@@ -53,7 +54,8 @@ class ServeEngine:
                  max_len: int = 512, sl_granularity: int = 32,
                  deadline_s: Optional[float] = None,
                  n_replicas: int = 1, hedge_factor: float = 3.0,
-                 policy: Optional[RecoveryPolicy] = None):
+                 policy: Optional[RecoveryPolicy] = None,
+                 timer: Optional[Callable[[], float]] = None):
         self.model = model
         self.params = params
         self.batch_size = batch_size
@@ -63,6 +65,9 @@ class ServeEngine:
         self.hedge_factor = hedge_factor
         self.policy = policy or RecoveryPolicy()
         self.replicas = ReplicaSet(n_replicas)
+        # injectable clock: tests pass a FakeClock so every latency, TTFT,
+        # and deadline decision is bit-identical across runs
+        self._now = timer or time.perf_counter
         # per-SL running median of past batch latencies: the hedge baseline
         self.latency_watchdog = StepTimeWatchdog(factor=hedge_factor)
         self._prefill = jax.jit(model.prefill)
@@ -102,12 +107,13 @@ class ServeEngine:
         penalty_per_call = float(spec.delay) if spec is not None else 0.0
         penalty = 0.0
         hedge_at: Optional[float] = None
-        exec_t0 = time.perf_counter()
+        deadline_hit = False
+        exec_t0 = self._now()
         with obs.span("serve/prefill", sl=sl, batch=n_admitted):
             logits, caches = self._prefill(self.params,
                                            {"tokens": jnp.asarray(toks)})
             jax.block_until_ready(logits)
-        prefill_dt = time.perf_counter() - exec_t0
+        prefill_dt = self._now() - exec_t0
         mreg.histogram("serve_prefill_s", sl=sl).observe(prefill_dt)
 
         # decode greedily; caches from prefill hold exactly sl entries, so
@@ -122,7 +128,7 @@ class ServeEngine:
         token = jnp.argmax(logits[:, -1] if logits.ndim == 3 else logits,
                            axis=-1).astype(jnp.int32)[:, None]
         n_steps = max((r.max_new_tokens for r in batch), default=0)
-        dec_t0 = time.perf_counter()
+        dec_t0 = self._now()
         outputs: List[List[int]] = [[] for _ in batch]
         emitted = 0                       # tokens bound for real requests
         decode_calls = 0
@@ -135,20 +141,21 @@ class ServeEngine:
             if step + 1 >= n_steps:       # final token came from the last
                 break                     # decode (or prefill) — done
             if self.deadline_s is not None and \
-                    time.perf_counter() - batch_t0 > self.deadline_s:
+                    self._now() - batch_t0 > self.deadline_s:
                 curtailed = sum(
                     max(0, r.max_new_tokens - len(outputs[i]))
                     for i, r in enumerate(batch) if i < n_admitted)
+                deadline_hit = True
                 mreg.counter("serve_deadline_exceeded_total").inc()
                 obs.event("serve_deadline", sl=sl,
                           deadline_s=self.deadline_s,
                           curtailed_tokens=curtailed)
                 break
             if hedge_at is None and hedge_cutoff_s is not None:
-                virtual = time.perf_counter() - exec_t0 + penalty
+                virtual = self._now() - exec_t0 + penalty
                 if virtual > hedge_cutoff_s:
                     hedge_at = virtual
-            t1 = time.perf_counter()
+            t1 = self._now()
             with obs.span("serve/decode_token", pos=sl + step):
                 def decode_once():
                     faults.fire("decode", self._decode_calls)
@@ -168,16 +175,17 @@ class ServeEngine:
                 token = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
                 jax.block_until_ready(token)
             mreg.histogram("serve_decode_token_s", sl=sl).observe(
-                time.perf_counter() - t1)
-        decode_dt = time.perf_counter() - dec_t0 if n_steps else 0.0
-        latency = time.perf_counter() - exec_t0 + penalty
+                self._now() - t1)
+        decode_dt = self._now() - dec_t0 if n_steps else 0.0
+        latency = self._now() - exec_t0 + penalty
         if hedge_at is None and hedge_cutoff_s is not None \
                 and latency > hedge_cutoff_s:
             hedge_at = latency            # crossed after the last decode
         return {"outputs": outputs, "emitted": emitted,
                 "decode_calls": decode_calls, "prefill_dt": prefill_dt,
                 "decode_dt": decode_dt, "latency_s": latency,
-                "penalty_s": penalty, "hedge_at": hedge_at}
+                "penalty_s": penalty, "hedge_at": hedge_at,
+                "deadline_hit": deadline_hit}
 
     # ------------------------------------------------------------------
     def run_batch(self, requests: List[Request]) -> List[Request]:
@@ -193,26 +201,38 @@ class ServeEngine:
         come back with ``shed=True`` and empty output for the caller to
         requeue. With ``deadline_s`` set, decode stops once the batch has
         used its budget (prefill included) and the remaining tokens are
-        curtailed — latency SLO over completion. Transient decode faults
-        are retried with backoff (the injected ones fire before the jitted
-        call, so no cache state is lost). With ``n_replicas > 1`` a batch
-        running ``hedge_factor``× past its per-SL median baseline is hedged
-        onto another replica; only the winning execution's tokens are
-        committed and counted.
+        curtailed — latency SLO over completion; curtailed requests carry
+        ``curtailed=True`` and the serve EpochLog records the count, so a
+        partial answer is never mistaken for a completed one. Transient
+        decode faults are retried with backoff (the injected ones fire
+        before the jitted call, so no cache state is lost). With
+        ``n_replicas > 1`` a batch running ``hedge_factor``× past its
+        per-SL median baseline is hedged onto another replica; only the
+        winning execution's tokens are committed and counted.
+
+        Batch formation is delegated to the scheduler layer (an
+        ``AdmissionQueue`` + ``FifoPolicy`` one-shot): this method is the
+        run-to-completion compatibility wrapper around the same admission
+        machinery the continuous ``serve()`` loop uses.
         """
+        from repro.serve.sched.policy import FifoPolicy
+        from repro.serve.sched.queue import AdmissionQueue
+
         mreg = obs.metrics
         mreg.gauge("serve_queue_depth").set(len(requests))
-        admitted = requests[:self.batch_size]
-        for r in admitted:
-            r.shed = False                # a requeued request runs clean
-        for r in requests[self.batch_size:]:              # shed-on-overload
-            r.shed = True
+        q = AdmissionQueue(self.max_len, timer=self._now)
+        tickets = {id(r): q.submit(r) for r in requests}
+        picked = FifoPolicy().select(q.pending(), self.batch_size)
+        q.take(picked)
+        admitted = [t.req for t in picked]
+        for r in requests:                                # shed-on-overload
+            r.shed = tickets[id(r)] not in picked
         n_shed = len(requests) - len(admitted)
         if n_shed:
             mreg.counter("serve_shed_total").inc(n_shed)
             obs.event("serve_shed", count=n_shed, admitted=len(admitted))
         mreg.gauge("serve_batch_fill").set(len(admitted) / self.batch_size)
-        batch_t0 = time.perf_counter()                    # deadline clock
+        batch_t0 = self._now()                            # deadline clock
         batch = list(admitted)
         while len(batch) < self.batch_size:               # pad batch
             batch.append(Request(prompt=np.zeros(4, np.int32),
@@ -270,22 +290,51 @@ class ServeEngine:
 
         # commit the winning execution only: the loser's tokens never reach
         # the caller or the tokens_out counter
+        n_curtailed = 0
         for i, r in enumerate(admitted):
             r.output.extend(result["outputs"][i])
+            r.curtailed = bool(result["deadline_hit"]
+                               and len(r.output) < r.max_new_tokens)
+            n_curtailed += int(r.curtailed)
+        if n_curtailed:
+            mreg.counter("serve_curtailed_total").inc(n_curtailed)
         latency = result["latency_s"]
         self.latency_watchdog.observe(sl, latency)
         mreg.histogram("serve_batch_latency_s", sl=sl).observe(latency)
         # tokens_out counts tokens actually emitted to real requests — not
         # requested tokens summed over the padded batch — so serve
         # throughput metrics stay honest under shedding, deadlines, and
-        # hedging
+        # hedging; curtailed distinguishes deadline-cut partials from
+        # completed requests
         self.log.append(sl, result["prefill_dt"],
                         decode_s=result["decode_dt"],
                         decode_steps=float(result["decode_calls"]),
                         tokens_out=float(result["emitted"]),
                         latency_s=latency, hedged=float(hedged),
+                        curtailed=float(n_curtailed),
                         replica=float(winner))
         return requests
+
+    # ------------------------------------------------------------------
+    def serve(self, requests: List[Request], *, policy=None,
+              max_queue: Optional[int] = None):
+        """Serve ``requests`` through the SL-aware continuous-batching
+        scheduler (``repro.serve.sched``): SL-bucketed admission, slot
+        admission at decode-step granularity, immediate eviction of
+        finished sequences. Returns the run's ``ServeStats``.
+
+        ``policy`` is any ``sched.policy.AdmissionPolicy`` (default:
+        bucket-affine). Per-request log records land in ``self.log`` (one
+        per request, keyed by its padded SL), so ``seqpoints()`` works on
+        a scheduled trace exactly as on a run-to-completion one.
+        """
+        from repro.serve.sched.loop import ContinuousBatcher
+
+        batcher = ContinuousBatcher(self, policy=policy,
+                                    max_queue=max_queue)
+        for r in requests:
+            batcher.submit(r)
+        return batcher.run()
 
     def seqpoints(self, **kw) -> SeqPointSet:
         return select_seqpoints(self.log, **kw)

@@ -385,3 +385,31 @@ def test_trainer_disabled_obs_keeps_log_identical():
     rep = tr.train(3)
     assert rep.steps == 3 and tr.epoch_log.num_iterations == 3
     assert obs.get_tracer().events == []
+
+
+# ------------------------------------------------------- live scrape endpoint
+
+
+def test_serve_http_scrapes_live_metrics():
+    """The background endpoint renders a fresh to_prometheus() per scrape
+    (live values, not snapshot-at-exit) and shuts down cleanly."""
+    import urllib.request
+
+    reg = MetricsRegistry()
+    reg.counter("scrape_demo_total", sl=64).inc(2)
+    with obs.serve_http(registry=reg) as srv:
+        assert srv.port > 0
+        body = urllib.request.urlopen(srv.url, timeout=5).read().decode()
+        assert '# TYPE scrape_demo_total counter' in body
+        assert 'scrape_demo_total{sl="64"} 2' in body
+        # live: a later increment shows up on the next scrape
+        reg.counter("scrape_demo_total", sl=64).inc()
+        body = urllib.request.urlopen(srv.url, timeout=5).read().decode()
+        assert 'scrape_demo_total{sl="64"} 3' in body
+        # index points at /metrics; unknown paths 404
+        idx = urllib.request.urlopen(
+            f"http://{srv.addr}:{srv.port}/", timeout=5).read().decode()
+        assert "/metrics" in idx
+        with pytest.raises(Exception):
+            urllib.request.urlopen(
+                f"http://{srv.addr}:{srv.port}/nope", timeout=5)
